@@ -1,0 +1,189 @@
+"""Paper-figure benchmarks (Fig 6-11, Tables I-II) on the event engine.
+
+Methodology follows §VI: rates are set so the sync-caching baselines run
+near their sustainable limit (their stateful operators ~60-75% busy incl.
+I/O wait, Table I), measurements start after warmup, and the state exceeds
+the cache.  All runs are deterministic (seeded discrete-event clock).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+from repro.streaming.nexmark import NexmarkConfig, build_query
+from repro.streaming.synthetic import SyntheticConfig, build_synthetic
+from repro.streaming.ysb import YSBConfig, build_ysb
+
+APPROACHES: List[Tuple[str, str, str]] = [
+    ("Cache-LRU", "lru", "sync"),
+    ("Cache-Clock", "clock", "sync"),
+    ("AsyncIO", "lru", "async"),
+    ("KeyedPrefetching", "tac", "prefetch"),
+]
+
+# calibrated operating points (sync baseline near its sustainable limit)
+WORKLOADS: Dict[str, Dict[str, Any]] = {
+    "q13": dict(rate=22_000, cache_entries=512, parallelism=2,
+                source_parallelism=1, io_workers=2),
+    "q18": dict(rate=40_000, cache_entries=768, parallelism=2,
+                source_parallelism=1, io_workers=3, active_window=30.0),
+    "q19": dict(rate=22_000, cache_entries=384, parallelism=2,
+                source_parallelism=1, io_workers=4),
+    "q20": dict(rate=24_000, cache_entries=384, parallelism=2,
+                source_parallelism=1, io_workers=2),
+    "ysb": dict(rate=26_000, cache_entries=8192, parallelism=1,
+                source_parallelism=1, io_workers=24),
+}
+
+DUR, WARM = 6.0, 3.0
+
+
+def _build(workload: str, policy: str, mode: str, **over):
+    cfgd = dict(WORKLOADS[workload])
+    cfgd.update(over)
+    if workload == "ysb":
+        ycfg = YSBConfig(rate=cfgd.pop("rate"))
+        return build_ysb(policy, mode, ycfg, **cfgd)
+    ncfg = NexmarkConfig(rate=cfgd.pop("rate"),
+                         active_window=cfgd.pop("active_window", 60.0),
+                         hot_auction_prob=cfgd.pop("hot_auction_prob", 0.5))
+    return build_query(workload, policy, mode, ncfg, **cfgd)
+
+
+def run_one(workload: str, policy: str, mode: str, dur=DUR, warm=WARM,
+            **over) -> Dict[str, Any]:
+    eng = _build(workload, policy, mode, **over)
+    m = eng.run(duration=dur, warmup=warm)
+    m["lookahead_timeline"] = eng.lookahead_timeline
+    return m
+
+
+# ------------------------------------------------------------------- figures
+def fig6(rows: List[str]) -> Dict[str, Dict[str, Any]]:
+    """End-to-end percentile latency, every workload x approach."""
+    out = {}
+    for wl in WORKLOADS:
+        for label, policy, mode in APPROACHES:
+            m = run_one(wl, policy, mode)
+            key = f"fig6_{wl}_{label}"
+            out[key] = m
+            rows.append(f"{key},{m['p999'] * 1e6:.0f},"
+                        f"p50_ms={m['p50']*1e3:.2f};p99_ms={m['p99']*1e3:.2f}"
+                        f";p999_ms={m['p999']*1e3:.2f}"
+                        f";hit={m.get('stateful_hit_rate', 0):.3f}"
+                        f";thr={m['throughput']:.0f}")
+    return out
+
+
+def fig7(rows: List[str]) -> None:
+    """Q13 p99/p999 as the hot-auction percentage varies 25..100%."""
+    for hot in (0.25, 0.5, 0.75, 1.0):
+        for label, policy, mode in APPROACHES:
+            m = run_one("q13", policy, mode, dur=4.0,
+                        hot_auction_prob=hot)
+            rows.append(f"fig7_q13_hot{int(hot*100)}_{label},"
+                        f"{m['p999'] * 1e6:.0f},"
+                        f"p99_ms={m['p99']*1e3:.2f}"
+                        f";p999_ms={m['p999']*1e3:.2f}")
+
+
+def fig8(rows: List[str]) -> None:
+    """p999 with varying cache sizes (q13 and q20)."""
+    for wl in ("q13", "q20"):
+        for entries in (256, 512, 2048):
+            for label, policy, mode in APPROACHES:
+                m = run_one(wl, policy, mode, dur=4.0,
+                            cache_entries=entries)
+                rows.append(f"fig8_{wl}_c{entries}_{label},"
+                            f"{m['p999'] * 1e6:.0f},"
+                            f"p999_ms={m['p999']*1e3:.2f}"
+                            f";hit={m.get('stateful_hit_rate', 0):.3f}")
+
+
+def fig9(rows: List[str]) -> None:
+    """Impact of the CMS threshold T on latency (q13, prefetching)."""
+    for T in (5, 20, 80, None):          # None => no filter (hint everything)
+        conf = {"threshold": T} if T is not None else {"threshold": 10 ** 9}
+        label = f"T{T}" if T is not None else "nofilter"
+        m = run_one("q13", "tac", "prefetch", dur=4.0, cms_conf=conf)
+        rows.append(f"fig9_q13_{label},{m['p999'] * 1e6:.0f},"
+                    f"p50_ms={m['p50']*1e3:.2f};p999_ms={m['p999']*1e3:.2f}"
+                    f";hint_bytes={m['hint_bytes']}")
+
+
+def fig10(rows: List[str]) -> Dict[str, Any]:
+    """Dynamic lookahead adaptation timeline (synthetic query)."""
+    cfg = SyntheticConfig(t_mismatch=8.0, t_latency_drop=16.0)
+    eng = build_synthetic(cfg)
+    m = eng.run(duration=24.0, warmup=2.0)
+    tl = ";".join(f"{t:.1f}s->{op}" for t, op in eng.lookahead_timeline)
+    sw = ";".join(f"{t:.1f}s:{why}->{to}"
+                  for t, _, why, to in eng.controller.switch_log)
+    rows.append(f"fig10_adaptation,{m['p999'] * 1e6:.0f},"
+                f"timeline={tl};hit={m['stateful_hit_rate']:.3f}")
+    return {"timeline": eng.lookahead_timeline,
+            "switch_log": eng.controller.switch_log, "metrics": m}
+
+
+def fig11(rows: List[str]) -> None:
+    """Max sustainable throughput: highest offered rate with bounded queues
+    and >97% delivery."""
+    for wl in WORKLOADS:
+        base = WORKLOADS[wl]["rate"]
+        for label, policy, mode in APPROACHES:
+            best = 0.0
+            for mult in (0.8, 1.0, 1.25, 1.5):
+                rate = base * mult
+                m = run_one(wl, policy, mode, dur=3.0, warm=2.0, rate=rate)
+                queued = m.get("stateful_queued", 0)
+                # sustainable: queues bounded & outputs keep up
+                expected = m["throughput"]
+                if queued < 2000 and m["throughput"] > 0:
+                    best = max(best, m["throughput"])
+                else:
+                    break
+            rows.append(f"fig11_{wl}_{label},{best:.0f},"
+                        f"max_sustainable_eps={best:.0f}")
+
+
+def tab1(rows: List[str], fig6_out: Dict[str, Dict[str, Any]]) -> None:
+    """CPU utilisation of the stateful operator (busy incl. I/O wait)."""
+    for key, m in fig6_out.items():
+        wl_label = key.replace("fig6_", "")
+        rows.append(f"tab1_{wl_label},{m.get('util_stateful', 0) * 1e6:.0f},"
+                    f"stateful_busy_frac={m.get('util_stateful', 0):.3f}")
+
+
+def tab2(rows: List[str], fig6_out: Dict[str, Dict[str, Any]]) -> None:
+    """Network overhead of hints vs data bytes."""
+    for key, m in fig6_out.items():
+        if "KeyedPrefetching" not in key:
+            continue
+        wl = key.replace("fig6_", "").replace("_KeyedPrefetching", "")
+        rows.append(f"tab2_{wl},{m['net_overhead'] * 1e6:.0f},"
+                    f"hint_overhead_pct={m['net_overhead'] * 100:.2f}")
+
+
+def validate_claims(rows: List[str],
+                    fig6_out: Dict[str, Dict[str, Any]]) -> None:
+    """Paper claims: p999 reduced 1.34-11x vs best baseline; p50 <= async
+    + 3ms; throughput >= baselines."""
+    for wl in WORKLOADS:
+        kp = fig6_out[f"fig6_{wl}_KeyedPrefetching"]
+        base_p999 = min(fig6_out[f"fig6_{wl}_{b}"]["p999"]
+                        for b, _, _ in APPROACHES[:3])
+        worst_p999 = max(fig6_out[f"fig6_{wl}_{b}"]["p999"]
+                         for b, _, _ in APPROACHES[:3])
+        speedup_min = base_p999 / kp["p999"]
+        speedup_max = worst_p999 / kp["p999"]
+        async_p50 = fig6_out[f"fig6_{wl}_AsyncIO"]["p50"]
+        p50_ok = kp["p50"] <= async_p50 + 3e-3
+        thr_ok = kp["throughput"] >= 0.99 * max(
+            fig6_out[f"fig6_{wl}_{b}"]["throughput"]
+            for b, _, _ in APPROACHES[:3])
+        rows.append(
+            f"claims_{wl},{speedup_min * 1e6:.0f},"
+            f"p999_speedup_vs_best={speedup_min:.2f}"
+            f";vs_worst={speedup_max:.2f};p50_within_3ms_of_async={p50_ok}"
+            f";throughput_not_worse={thr_ok}")

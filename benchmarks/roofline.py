@@ -1,0 +1,70 @@
+"""Roofline table from the dry-run artifacts (deliverable g / §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+
+def load_records(path: str = "results/dryrun") -> List[Dict[str, Any]]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def roofline_rows(rows: List[str], path: str = "results/dryrun",
+                  mesh: str = "single") -> List[Dict[str, Any]]:
+    recs = [r for r in load_records(path)
+            if r.get("mesh") == mesh and not r.get("note")]
+    out = []
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("skipped"):
+            rows.append(f"{name},0,skipped=subquadratic-only")
+            continue
+        if not r.get("ok"):
+            rows.append(f"{name},0,FAILED")
+            continue
+        ro = r["roofline"]
+        dom = ro["dominant"].replace("_s", "")
+        step_s = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        rows.append(
+            f"{name},{step_s * 1e6:.0f},"
+            f"compute_s={ro['compute_s']:.4f};memory_s={ro['memory_s']:.4f}"
+            f";collective_s={ro['collective_s']:.4f};dominant={dom}"
+            f";useful_flops_ratio={ro['useful_flops_ratio']:.3f}"
+            f";roofline_fraction={ro['roofline_fraction']:.4f}"
+            f";fits16g_args={r['memory']['fits_16g_args']}")
+        out.append(r)
+    return out
+
+
+def markdown_table(path: str = "results/dryrun", mesh: str = "single") -> str:
+    recs = [r for r in load_records(path)
+            if r.get("mesh") == mesh and not r.get("note")]
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL/HLO flops | roofline frac | args GiB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (sub-quadratic only) | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED |")
+            continue
+        ro, mem = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+            f"{ro['dominant'].replace('_s','')} | "
+            f"{ro['useful_flops_ratio']:.3f} | "
+            f"{ro['roofline_fraction']:.4f} | "
+            f"{mem['argument_size_in_bytes']/2**30:.2f} | "
+            f"{'Y' if mem['fits_16g_args'] else 'N'} |")
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,"
+                         "tab1,tab2,roofline,claims")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import paper, roofline
+
+    os.makedirs(args.out, exist_ok=True)
+    rows = ["name,us_per_call,derived"]
+
+    def want(x):
+        return only is None or x in only
+
+    fig6_out = {}
+    t0 = time.time()
+    if want("fig6") or want("tab1") or want("tab2") or want("claims"):
+        fig6_out = paper.fig6(rows)
+        print(f"[bench] fig6 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if want("fig7"):
+        paper.fig7(rows)
+        print(f"[bench] fig7 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if want("fig8"):
+        paper.fig8(rows)
+        print(f"[bench] fig8 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if want("fig9"):
+        paper.fig9(rows)
+        print(f"[bench] fig9 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if want("fig10"):
+        paper.fig10(rows)
+        print(f"[bench] fig10 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if want("fig11"):
+        paper.fig11(rows)
+        print(f"[bench] fig11 done ({time.time()-t0:.0f}s)", file=sys.stderr)
+    if fig6_out and want("tab1"):
+        paper.tab1(rows, fig6_out)
+    if fig6_out and want("tab2"):
+        paper.tab2(rows, fig6_out)
+    if fig6_out and want("claims"):
+        paper.validate_claims(rows, fig6_out)
+    if want("roofline"):
+        roofline.roofline_rows(rows)
+
+    csv = "\n".join(rows)
+    print(csv)
+    with open(os.path.join(args.out, "bench.csv"), "w") as f:
+        f.write(csv + "\n")
+
+
+if __name__ == "__main__":
+    main()

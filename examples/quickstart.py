@@ -1,0 +1,80 @@
+"""Quickstart: the paper's Fig-1 fraud-detection pipeline.
+
+A stream of card transactions goes through attribute extraction and
+normalization before a risk-assessment operator that reads per-card state
+from a (modelled) NVMe-backed key-value store.  Keyed Prefetching extracts
+the card id at the attribute-extraction operator (the lookahead), sends
+hints on a side channel, and the Timestamp-Aware Cache stages the card state
+before the transaction arrives.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.streaming.backend import LOCAL_NVME
+from repro.streaming.engine import (Engine, MapOp, SinkOp, SourceOp,
+                                    StatefulOp)
+from repro.streaming.events import Tuple_
+
+
+def build(policy: str, mode: str) -> Engine:
+    eng = Engine()
+    rng = random.Random(1)
+    n_cards = 200_000
+
+    def gen(now):
+        # 30% of traffic from a rotating set of hot cards
+        if rng.random() < 0.3:
+            card = int(now) * 50 + rng.randint(0, 49)
+        else:
+            card = rng.randint(0, n_cards - 1)
+        return (card, {"card": card, "amount": rng.random() * 500}, 180)
+
+    def key_of(tup):
+        return tup.payload["card"]
+
+    def risk(tup, state):
+        hist = dict(state or {"n": 0, "total": 0.0})
+        hist["n"] += 1
+        hist["total"] += tup.payload["amount"]
+        score = tup.payload["amount"] / (1 + hist["total"] / hist["n"])
+        return hist, [Tuple_(tup.ts, tup.key, {"score": score}, 64,
+                             tup.ingest_t)]
+
+    src = eng.add(SourceOp(eng, "source", 1, 20_000, gen))
+    extract = eng.add(MapOp(eng, "extract", 2, service_time=12e-6,
+                            key_of=key_of))
+    normalize = eng.add(MapOp(eng, "normalize", 2, service_time=8e-6,
+                              key_of=key_of))
+    assess = eng.add(StatefulOp(eng, "stateful", 2, risk, LOCAL_NVME,
+                                cache_capacity=512 * 300, policy=policy,
+                                mode=mode, io_workers=3, state_size=300,
+                                default_state=lambda k: {"n": 0,
+                                                         "total": 0.0}))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+    eng.connect(src, extract)
+    eng.connect(extract, normalize)
+    eng.connect(normalize, assess)
+    eng.connect(assess, sink, partition=lambda k, n: 0)
+    if mode == "prefetch":
+        eng.register_prefetching(assess, [extract, normalize])
+    return eng
+
+
+def main():
+    print("fraud-detection quickstart (6s simulated stream, 20k tx/s)")
+    for label, policy, mode in [("cache-only (sync)", "lru", "sync"),
+                                ("async I/O", "lru", "async"),
+                                ("keyed prefetching", "tac", "prefetch")]:
+        m = build(policy, mode).run(duration=5.0, warmup=2.0)
+        print(f"  {label:22s} p50={m['p50']*1e3:7.2f}ms "
+              f"p999={m['p999']*1e3:8.2f}ms "
+              f"cache-hit={m.get('stateful_hit_rate', 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests while Keyed Prefetching stages
+multi-turn session state (see repro/launch/serve.py for the machinery).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Sharded checkpointing with async write-out and atomic publication.
+
+Layout per checkpoint:  <dir>/step_<N>/
+    manifest.json   tree structure, dtypes/shapes, step, data-pipeline step
+    shard_<i>.npz   flattened leaves (one shard per host in multi-host runs;
+                    one shard here)
+
+Writes happen on a background thread (the training loop never blocks on
+storage — the same off-critical-path discipline as the TAC eviction buffer),
+and a checkpoint becomes visible only via atomic rename, so a crash
+mid-write can never corrupt the restore point.  ``keep`` bounds retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = [(f"leaf_{i}", np.asarray(x)) for i, x in enumerate(leaves)]
+    return flat, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        # snapshot to host BEFORE handing to the writer thread
+        flat, treedef = _flatten(state)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(flat),
+            "dtypes": [str(v.dtype) for _, v in flat],
+            "extra": extra or {},
+        }
+        self.wait()                       # one in-flight save at a time
+
+        def _write():
+            tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+            try:
+                np.savez(os.path.join(tmp, "shard_0.npz"),
+                         **{k: v for k, v in flat})
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                final = os.path.join(self.dir, f"step_{step:08d}")
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+
+        self.saves += 1
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def list_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Tuple[int, Any, Dict]:
+        """Restore into the structure of ``template`` (shapes must match).
+        Returns (step, state, extra)."""
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = steps[-1] if step is None else step
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        assert len(leaves) == manifest["n_leaves"], "structure mismatch"
+        import jax.numpy as jnp
+        import ml_dtypes  # noqa: F401 (registers bfloat16 et al. with numpy)
+        dtypes = manifest.get("dtypes")
+        new_leaves = []
+        for i in range(len(leaves)):
+            arr = data[f"leaf_{i}"]
+            if dtypes and arr.dtype.kind == "V":
+                arr = arr.view(np.dtype(dtypes[i]))   # bf16 roundtrips as V2
+            new_leaves.append(jnp.asarray(arr))
+        state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return step, state, manifest.get("extra", {})
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None

@@ -1,0 +1,195 @@
+"""Timestamp-Aware Cache (paper §IV-D).
+
+One cache for both previously-accessed and prefetched entries, ordered by a
+single signal — event timestamps:
+
+  * accessed entry:  t_k = event time of last access (LRU-like among those);
+  * prefetched entry: t_k = hint timestamp (in the future => protected);
+  * renewing hint for a cached key bumps t_k to the hint timestamp.
+
+Eviction removes the smallest-timestamp entry.  Dirty victims go to the
+EVICTION BUFFER and are written back asynchronously by the state thread
+pool, so writes never block the data path; a read or hint for a key staged
+in the eviction buffer moves it back.
+
+The paper implements the order as a timestamp-sorted doubly-linked list;
+this implementation keeps the identical eviction ORDER with a lazy min-heap
+(O(log n) ops regardless of hint-timestamp interleaving).  The TPU-side twin
+(``repro.core.tac_jax`` + ``repro.kernels.tac_probe``) is a fixed-slot
+argmin-timestamp variant validated for order-equivalence in tests.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Entry:
+    key: Any
+    state: Any
+    ts: float
+    dirty: bool = False
+    size: int = 1
+
+
+class TimestampAwareCache:
+    def __init__(self, capacity: int,
+                 on_writeback: Optional[Callable[[Any, Any], None]] = None):
+        """capacity counts entry ``size`` units (bytes or slots)."""
+        self.capacity = capacity
+        self.entries: Dict[Any, Entry] = {}
+        self.evict_buffer: Dict[Any, Entry] = {}
+        self._heap: List[Tuple[float, int, Any]] = []   # (ts, gen, key) lazy
+        self._gen = 0
+        self.used = 0
+        self.on_writeback = on_writeback
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.writebacks = 0
+        self.prefetch_insertions = 0
+        self.prefetch_unused_evicted = 0
+        # per-lookahead-origin accounting for mismatch attribution
+        self.pf_ins_by_origin: Dict[str, int] = {}
+        self.pf_unused_by_origin: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- internals
+    def _push(self, e: Entry) -> None:
+        self._gen += 1
+        heapq.heappush(self._heap, (e.ts, self._gen, e.key))
+
+    def _evict_one(self) -> None:
+        while self._heap:
+            ts, _, key = heapq.heappop(self._heap)
+            e = self.entries.get(key)
+            if e is None or e.ts != ts:
+                continue                                   # stale heap record
+            del self.entries[key]
+            self.used -= e.size
+            self.evictions += 1
+            if getattr(e, "prefetched_unused", False):
+                self.prefetch_unused_evicted += 1
+                org = getattr(e, "origin", "")
+                self.pf_unused_by_origin[org] = \
+                    self.pf_unused_by_origin.get(org, 0) + 1
+            if e.dirty:
+                self.evict_buffer[key] = e                 # async write-back
+            return
+        return
+
+    def _make_room(self, size: int) -> None:
+        while self.used + size > self.capacity and (self._heap or self.entries):
+            before = self.used
+            self._evict_one()
+            if self.used == before:
+                break
+
+    # ------------------------------------------------------------ public API
+    def lookup(self, key: Any, now_ts: float) -> Optional[Any]:
+        """Read by key at event time now_ts.  Refreshes the timestamp.
+        Checks the eviction buffer (paper: staged entries move back)."""
+        e = self.entries.get(key)
+        if e is None:
+            staged = self.evict_buffer.pop(key, None)
+            if staged is not None:
+                self._make_room(staged.size)
+                staged.ts = max(staged.ts, now_ts)
+                staged.prefetched_unused = False
+                self.entries[key] = staged
+                self.used += staged.size
+                self._push(staged)
+                self.hits += 1
+                return staged.state
+            self.misses += 1
+            return None
+        self.hits += 1
+        if now_ts > e.ts:
+            e.ts = now_ts
+            self._push(e)
+        e.prefetched_unused = False
+        return e.state
+
+    def contains(self, key: Any) -> bool:
+        return key in self.entries or key in self.evict_buffer
+
+    def insert(self, key: Any, state: Any, ts: float, dirty: bool = False,
+               size: int = 1, prefetched: bool = False,
+               origin: str = "") -> None:
+        """Insert/overwrite an entry (after an access or a completed fetch)."""
+        old = self.entries.get(key)
+        if old is not None:
+            self.used -= old.size
+        self.evict_buffer.pop(key, None)
+        self._make_room(size)
+        e = Entry(key, state, ts, dirty, size)
+        e.prefetched_unused = prefetched
+        e.origin = origin
+        self.entries[key] = e
+        self.used += size
+        self._push(e)
+        if prefetched:
+            self.prefetch_insertions += 1
+            self.pf_ins_by_origin[origin] = \
+                self.pf_ins_by_origin.get(origin, 0) + 1
+
+    def write(self, key: Any, state: Any, now_ts: float, size: int = 1
+              ) -> None:
+        """Update state in cache (read-modify-write ops); marks dirty."""
+        e = self.entries.get(key)
+        if e is not None:
+            e.state = state
+            e.dirty = True
+            e.prefetched_unused = False
+            if now_ts > e.ts:
+                e.ts = now_ts
+                self._push(e)
+            return
+        self.insert(key, state, now_ts, dirty=True, size=size)
+
+    def renew(self, key: Any, hint_ts: float) -> bool:
+        """A hint arrived for a cached key: bump its predicted relevance."""
+        e = self.entries.get(key)
+        if e is None:
+            staged = self.evict_buffer.pop(key, None)
+            if staged is None:
+                return False
+            self._make_room(staged.size)
+            staged.ts = max(staged.ts, hint_ts)
+            self.entries[key] = staged
+            self.used += staged.size
+            self._push(staged)
+            return True
+        if hint_ts > e.ts:
+            e.ts = hint_ts
+            self._push(e)
+        return True
+
+    def pop_writeback(self) -> Optional[Entry]:
+        """State thread pool: take one dirty entry to write to the backend."""
+        if not self.evict_buffer:
+            return None
+        key = next(iter(self.evict_buffer))
+        e = self.evict_buffer.pop(key)
+        self.writebacks += 1
+        return e
+
+    def flush_dirty(self) -> List[Entry]:
+        """Checkpoint barrier: all dirty state (resident + staged) to persist
+        (paper §IV-E)."""
+        out = [e for e in self.entries.values() if e.dirty]
+        out += list(self.evict_buffer.values())
+        for e in out:
+            e.dirty = False
+        self.evict_buffer.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0

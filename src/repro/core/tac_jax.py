@@ -1,0 +1,87 @@
+"""Device-side Timestamp-Aware Cache: fixed-slot, functional, jittable.
+
+The accelerator twin of ``repro.core.tac``: state rows live in
+(n_buckets x ways) slots; eviction picks the min-timestamp way within the
+key's bucket (set-associative; with n_buckets=1 it is exactly the paper's
+fully-associative min-ts policy — the equivalence test in
+tests/test_tac_jax.py checks eviction-order agreement with the Python TAC).
+Lookups go through the ``tac_probe`` Pallas kernel; admissions are a scan
+(duplicate keys in one batch must see each other's effects).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tac_probe.ops import bucket_of, tac_probe
+
+
+class TACState(NamedTuple):
+    keys: jax.Array        # [n_buckets, ways] int32, -1 = empty
+    ts: jax.Array          # [n_buckets, ways] fp32
+    vals: jax.Array        # [n_buckets, ways, D]
+    dirty: jax.Array       # [n_buckets, ways] bool
+
+
+def init(n_buckets: int, ways: int, d: int,
+         dtype=jnp.float32) -> TACState:
+    return TACState(
+        keys=jnp.full((n_buckets, ways), -1, jnp.int32),
+        ts=jnp.full((n_buckets, ways), -jnp.inf, jnp.float32),
+        vals=jnp.zeros((n_buckets, ways, d), dtype),
+        dirty=jnp.zeros((n_buckets, ways), bool))
+
+
+def lookup(state: TACState, qkeys: jax.Array, now_ts: jax.Array,
+           interpret: bool = True
+           ) -> Tuple[jax.Array, jax.Array, TACState]:
+    """Batched probe+gather; refreshes timestamps of hits (max with now)."""
+    vals, hit, way = tac_probe(qkeys, state.keys, state.vals,
+                               interpret=interpret)
+    b = bucket_of(qkeys, state.keys.shape[0])
+    safe_way = jnp.maximum(way, 0)
+    cur = state.ts[b, safe_way]
+    new_ts = state.ts.at[b, safe_way].max(
+        jnp.where(hit.astype(bool), now_ts, cur))
+    return vals, hit.astype(bool), state._replace(ts=new_ts)
+
+
+def renew(state: TACState, keys: jax.Array, hint_ts: jax.Array) -> TACState:
+    """Bump predicted relevance of cached keys (hint for a cached entry)."""
+    _, hit, way = tac_probe(keys, state.keys, state.vals, interpret=True)
+    b = bucket_of(keys, state.keys.shape[0])
+    safe = jnp.maximum(way, 0)
+    cur = state.ts[b, safe]
+    new_ts = state.ts.at[b, safe].max(
+        jnp.where(hit.astype(bool), hint_ts, cur))
+    return state._replace(ts=new_ts)
+
+
+def admit(state: TACState, keys: jax.Array, ts: jax.Array,
+          vals: jax.Array, dirty: jax.Array = None) -> TACState:
+    """Insert a batch (prefetched or freshly computed state).  Sequential
+    over the batch so duplicate buckets compose; each insert overwrites a
+    matching key if present, else evicts the bucket's min-ts way."""
+    if dirty is None:
+        dirty = jnp.zeros(keys.shape, bool)
+    n_buckets = state.keys.shape[0]
+
+    def one(st: TACState, inp):
+        k, t, v, d = inp
+        b = bucket_of(k[None], n_buckets)[0]
+        bkeys = st.keys[b]
+        bts = st.ts[b]
+        match = bkeys == k
+        way = jnp.where(match.any(), jnp.argmax(match), jnp.argmin(bts))
+        # overwrite semantics match TimestampAwareCache.insert (ts replaced)
+        new_ts = t
+        return TACState(
+            keys=st.keys.at[b, way].set(k),
+            ts=st.ts.at[b, way].set(new_ts),
+            vals=st.vals.at[b, way].set(v.astype(st.vals.dtype)),
+            dirty=st.dirty.at[b, way].set(d)), None
+
+    state, _ = jax.lax.scan(one, state, (keys, ts, vals, dirty))
+    return state

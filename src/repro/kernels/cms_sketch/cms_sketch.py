@@ -1,0 +1,64 @@
+"""Batched Count-Min Sketch update/estimate as a Pallas TPU kernel.
+
+The lookahead operator's hint extractor classifies a BATCH of keys per step
+on device: the counter matrix row lives in VMEM, the per-key column indices
+(hashes, computed on the VPU outside) arrive via scalar prefetch, and the
+sequential in-batch loop preserves exact duplicate-key accumulation —
+matching the streaming oracle bit-for-bit (saturating counters included).
+
+Grid: one step per sketch row; the row's [1, w] counter block is updated in
+place via input/output aliasing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cols_ref, counters_ref, out_counters_ref, est_ref, *,
+            batch: int, max_count: int):
+    r = pl.program_id(0)
+    out_counters_ref[...] = counters_ref[...]
+
+    def body(i, _):
+        c = cols_ref[r, i]
+        v = out_counters_ref[0, c]
+        v_new = jnp.minimum(v + 1, max_count)
+        out_counters_ref[0, c] = v_new
+        est_ref[0, i] = v_new
+        return 0
+
+    jax.lax.fori_loop(0, batch, body, 0)
+
+
+def cms_update_kernel(cols: jax.Array, counters: jax.Array, *,
+                      max_count: int = 255, interpret: bool = False):
+    """cols [d, B] int32 (precomputed hash columns per row); counters [d, w]
+    int32.  Returns (new_counters [d, w], est [d, B]) where est is each
+    key's counter value AFTER its increment (min over rows done outside)."""
+    d, B = cols.shape
+    _, w = counters.shape
+    kern = functools.partial(_kernel, batch=B, max_count=max_count)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d,),
+        in_specs=[pl.BlockSpec((1, w), lambda r, cols_p: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((1, w), lambda r, cols_p: (r, 0)),
+            pl.BlockSpec((1, B), lambda r, cols_p: (r, 0)),
+        ],
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((d, w), counters.dtype),
+            jax.ShapeDtypeStruct((d, B), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cols, counters)

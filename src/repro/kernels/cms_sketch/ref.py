@@ -1,0 +1,16 @@
+"""Pure-jnp/numpy oracle for the CMS kernel (sequential semantics)."""
+import numpy as np
+
+
+def cms_update_ref(cols, counters, max_count=255):
+    """cols [d,B]; counters [d,w].  Sequential per-row accumulation with
+    saturating counters; returns (new_counters, est [d,B])."""
+    counters = np.array(counters, copy=True)
+    d, B = cols.shape
+    est = np.zeros((d, B), dtype=np.int32)
+    for r in range(d):
+        for i in range(B):
+            c = cols[r, i]
+            counters[r, c] = min(counters[r, c] + 1, max_count)
+            est[r, i] = counters[r, c]
+    return counters, est

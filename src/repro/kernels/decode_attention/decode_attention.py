@@ -1,0 +1,99 @@
+"""Paged single-token GQA decode attention (PagedAttention adapted to TPU).
+
+The serving-side hot spot for ``decode_32k`` / ``long_500k``: one query token
+attends over a long KV history stored as fixed-size PAGES whose physical
+slots are assigned by the Timestamp-Aware Cache (repro.core.tac_jax).  The
+page table rides in scalar-prefetch memory so each grid step's BlockSpec
+index_map dereferences it — the kernel reads only resident pages, in page
+order, with online-softmax accumulation in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, lens_ref, q_ref, kp_ref, vp_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page: int, pages_per_seq: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    npg = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+
+    @pl.when(pi * page < seq_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # [H, d]
+        k = kp_ref[0].astype(jnp.float32)                # [page, d]
+        v = vp_ref[0].astype(jnp.float32)                # [page, dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / math.sqrt(q.shape[-1])                   # [H, page]
+        pos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, page_table: jax.Array,
+                                  seq_lens: jax.Array, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q [B, H, d]; k_pages/v_pages [n_slots, page, d*]; page_table
+    [B, pages_per_seq] physical slot ids; seq_lens [B].  Returns [B, H, dv].
+    """
+    B, H, d = q.shape
+    n_slots, page, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    pages_per_seq = page_table.shape[1]
+
+    kern = functools.partial(_kernel, page=page, pages_per_seq=pages_per_seq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, H, d), lambda b, pi, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, d), lambda b, pi, pt, ln: (pt[b, pi],
+                                                              0, 0)),
+            pl.BlockSpec((1, page, dv), lambda b, pi, pt, ln: (pt[b, pi],
+                                                               0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dv), lambda b, pi, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for paged decode attention."""
+import math
+
+import jax.numpy as jnp
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """q [B,H,d]; pages [n_slots,page,d*]; page_table [B,P]; seq_lens [B]."""
+    B, H, d = q.shape
+    page = k_pages.shape[1]
+    P = page_table.shape[1]
+    # gather logical KV [B, P*page, d]
+    k = k_pages[page_table].reshape(B, P * page, -1).astype(jnp.float32)
+    v = v_pages[page_table].reshape(B, P * page, -1).astype(jnp.float32)
+    s = jnp.einsum("bhd,btd->bht", q.astype(jnp.float32), k) / math.sqrt(d)
+    valid = jnp.arange(P * page)[None, :] < seq_lens[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bht,btd->bhd", p, v).astype(q.dtype)

@@ -1,0 +1,102 @@
+"""Blocked online-softmax attention (FlashAttention) as a Pallas TPU kernel.
+
+This is the compute hot spot of the ``prefill_32k`` / ``train_4k`` cells: the
+pure-JAX blocked attention in ``repro.models.layers`` spills its (m, l, o)
+accumulators to HBM every KV block (visible as the dominant fusion traffic in
+the dry-run §Roofline); this kernel keeps them in VMEM scratch.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); the innermost KV dimension is
+sequential on TPU, so the scratch accumulators persist across the KV blocks
+of one (head, q_block).  Causal blocks above the diagonal are skipped with
+pl.when (no MXU work issued for them).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q = q_ref[0].astype(jnp.float32)                 # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, d]
+        v = v_ref[0].astype(jnp.float32)                 # [bk, dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the causal diagonal
+        pl.when((qi + 1) * bq - 1 >= ki * bk)(body)
+    else:
+        body()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 256, bk: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q [BH, S, d]; k/v [BH, T, d*] (kv heads already broadcast to q heads).
+    Returns [BH, S, dv]."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    dv = v.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                             bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

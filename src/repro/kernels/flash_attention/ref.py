@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """q [BH,S,d]; k/v [BH,T,d*] -> [BH,S,dv] (fp32 math)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Chunked Mamba2 SSD scan as a Pallas TPU kernel.
+
+Hot spot of zamba2's ``train_4k``/``prefill_32k`` cells: chunk-local
+quadratic work runs on the MXU while the [N, P] recurrent state stays in
+VMEM scratch across the sequential chunk grid dimension (the pure-JAX
+version writes it to HBM every chunk).
+
+Grid: (B*H, n_chunks).  Per head the decay A[h] arrives via scalar
+prefetch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+            Q: int, N: int, P: int):
+    bh = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    A = a_ref[bh]                                        # scalar (negative)
+    x = x_ref[0].astype(jnp.float32)                     # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)                   # [Q, 1] -> [Q]
+    dt = dt[:, 0]
+    Bm = b_ref[0].astype(jnp.float32)                    # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                    # [Q, N]
+
+    dA = dt * A                                          # [Q] <= 0
+    cum = jnp.cumsum(dA)                                 # [Q]
+    dtx = dt[:, None] * x                                # [Q, P]
+
+    # intra-chunk quadratic part
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    diff = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    ldec = jnp.where(iota_i >= iota_j, diff, -jnp.inf)
+    M = CB * jnp.exp(ldec)
+    y = jax.lax.dot_general(M, dtx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    y += jax.lax.dot_general(Cm, state_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S <- S * exp(sum dA) + sum_j exp(cum_Q - cum_j) B_j dtx_j
+    w = jnp.exp(cum[-1] - cum)                           # [Q]
+    s_loc = jax.lax.dot_general(Bm * w[:, None], dtx,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [N, P]
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + s_loc
+
+
+def mamba2_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array, *, chunk: int = 64,
+                       interpret: bool = False) -> jax.Array:
+    """x [BH, S, P]; dt [BH, S]; A [BH] (negative); Bm/Cm [BH, S, N]
+    (groups already broadcast to heads).  Returns y [BH, S, P]."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    dt2 = dt[..., None]                                  # [BH, S, 1]
+
+    kern = functools.partial(_kernel, Q=Q, N=N, P=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda b, c, a: (b, c, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, c, a: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c, a: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c, a: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda b, c, a: (b, c, 0)),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt2, Bm, Cm)

@@ -1,0 +1,29 @@
+"""Sequential-oracle for the SSD chunk scan: plain per-step recurrence."""
+import jax.numpy as jnp
+
+
+def mamba2_scan_ref(x, dt, A, Bm, Cm):
+    """x [BH,S,P]; dt [BH,S]; A [BH]; Bm/Cm [BH,S,N].  y[t] = C_t . S_t with
+    S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t^T (outer)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A.astype(jnp.float32))       # [BH]
+        state = state * decay[:, None, None] \
+            + (dtt[:, None] * bt)[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bn,bnp->bp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, ys = jnp.swapaxes(xf, 0, 1), None
+    import jax
+    _, ys = jax.lax.scan(
+        step, s0, (jnp.swapaxes(xf, 0, 1), jnp.swapaxes(dtf, 0, 1),
+                   jnp.swapaxes(Bf, 0, 1), jnp.swapaxes(Cf, 0, 1)))
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the RWKV6 scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
+    return rwkv6_scan_kernel(r, k, v, w, u, chunk=chunk,
+                             interpret=interpret)

@@ -1,0 +1,22 @@
+"""Sequential oracle for the RWKV6 recurrence (mirrors repro.models.ssm)."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r/k/v/w [BH,S,N]; u [BH,N] -> y [BH,S,N]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                             # [BH, N]
+        kv = kt[..., :, None] * vt[..., None, :]         # [BH, N, N]
+        y = jnp.einsum("bi,bij->bj", rt, S + uf[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    BH, S, N = r.shape
+    s0 = jnp.zeros((BH, N, N), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, tuple(jnp.swapaxes(t, 0, 1)
+                                         for t in (rf, kf, vf, wf)))
+    return jnp.swapaxes(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,76 @@
+"""RWKV6 (Finch) data-dependent-decay recurrence as a Pallas TPU kernel.
+
+Hot spot of rwkv6-3b's train/prefill cells: the [N, N] per-head state stays
+in VMEM scratch across the sequential chunk grid while each timestep's rank-1
+update and readout run on the VPU/MXU.
+
+Grid: (B*H, n_chunks); per-head bonus u arrives as a [BH, N] input block.
+Recurrence per step t (head dim N):
+    y_t = r_t . (S + (u * k_t) v_t^T)
+    S   = diag(w_t) S + k_t v_t^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_ref, *,
+            Q: int, N: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)                     # [Q, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)                     # decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)                     # [N]
+
+    def step(t, carry):
+        S = carry
+        rt = jax.lax.dynamic_slice(r, (t, 0), (1, N))    # [1, N]
+        kt = jax.lax.dynamic_slice(k, (t, 0), (1, N))
+        vt = jax.lax.dynamic_slice(v, (t, 0), (1, N))
+        wt = jax.lax.dynamic_slice(w, (t, 0), (1, N))
+        kv = kt.T * vt                                   # [N, N] rank-1
+        y = jax.lax.dot_general(rt, S + u[:, None] * kv,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [1,N]
+        y_ref[0, t, :] = y[0].astype(y_ref.dtype)
+        return wt.T * S + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, Q, step, state_ref[...])
+
+
+def rwkv6_scan_kernel(r: jax.Array, k: jax.Array, v: jax.Array,
+                      w: jax.Array, u: jax.Array, *, chunk: int = 64,
+                      interpret: bool = False) -> jax.Array:
+    """r/k/v/w [BH, S, N]; u [BH, N].  Returns y [BH, S, N]."""
+    BH, S, N = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    kern = functools.partial(_kernel, Q=Q, N=N)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, N), r.dtype),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

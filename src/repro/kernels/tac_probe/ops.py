@@ -1,0 +1,23 @@
+"""jit'd wrapper: hash, probe, gather."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tac_probe.tac_probe import tac_probe_kernel
+
+_A, _B, _P = 2654435761, 40503, 2 ** 31 - 1
+
+
+def bucket_of(keys: jax.Array, n_buckets: int) -> jax.Array:
+    h = (keys.astype(jnp.uint32) * jnp.uint32(_A)) ^ jnp.uint32(_B)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def tac_probe(qkeys, bucket_keys, bucket_vals, *, interpret: bool = True):
+    buckets = bucket_of(qkeys, bucket_keys.shape[0])
+    return tac_probe_kernel(qkeys.astype(jnp.int32), buckets,
+                            bucket_keys, bucket_vals, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the TAC probe kernel."""
+import jax.numpy as jnp
+
+
+def tac_probe_ref(qkeys, buckets, bucket_keys, bucket_vals):
+    keys = bucket_keys[buckets]                    # [B, ways]
+    vals = bucket_vals[buckets]                    # [B, ways, D]
+    match = keys == qkeys[:, None]
+    hit = match.any(axis=1)
+    way = jnp.where(hit, jnp.argmax(match, axis=1), -1)
+    out = jnp.where(match[..., None], vals.astype(jnp.float32), 0.0) \
+        .sum(axis=1)
+    return out.astype(bucket_vals.dtype), hit.astype(jnp.int32), \
+        way.astype(jnp.int32)

@@ -1,0 +1,71 @@
+"""Batched TAC probe+gather as a Pallas TPU kernel.
+
+The device-resident Timestamp-Aware Cache stores state rows in fixed slots
+organised as (n_buckets x ways); a batch of state-access keys is probed in
+one kernel launch: each grid step loads ONE bucket (ways keys + the ways x D
+value block) into VMEM via a scalar-prefetched bucket index, compares the
+ways keys on the VPU, and emits (value_row, hit, way).  This is the
+serving-side analogue of the paper's hash-map + gather hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(buckets_ref, qkeys_ref, bkeys_ref, bvals_ref,
+            out_ref, hit_ref, way_ref, *, ways: int, D: int):
+    b = pl.program_id(0)
+    qk = qkeys_ref[b]
+    keys = bkeys_ref[0]                                  # [ways]
+    match = keys == qk                                   # [ways] bool
+    hit = jnp.any(match)
+    way = jnp.argmax(match)                              # first match
+    vals = bvals_ref[0]                                  # [ways, D]
+    sel = jnp.where(match[:, None], vals.astype(jnp.float32), 0.0)
+    row = sel.sum(axis=0)                                # matched row or 0
+    out_ref[0] = row.astype(out_ref.dtype)
+    hit_ref[0] = hit.astype(jnp.int32)
+    way_ref[0] = jnp.where(hit, way, -1).astype(jnp.int32)
+
+
+def tac_probe_kernel(qkeys: jax.Array, buckets: jax.Array,
+                     bucket_keys: jax.Array, bucket_vals: jax.Array, *,
+                     interpret: bool = False):
+    """qkeys [B] int32; buckets [B] int32 (hash(qkey) % n_buckets, computed
+    by the caller); bucket_keys [n_buckets, ways] int32 (-1 = empty);
+    bucket_vals [n_buckets, ways, D].  Returns (values [B, D], hit [B],
+    way [B])."""
+    B = qkeys.shape[0]
+    n_buckets, ways = bucket_keys.shape
+    D = bucket_vals.shape[-1]
+
+    kern = functools.partial(_kernel, ways=ways, D=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, ways), lambda b, bk, qk: (bk[b], 0)),
+            pl.BlockSpec((1, ways, D), lambda b, bk, qk: (bk[b], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda b, bk, qk: (b, 0)),
+            pl.BlockSpec((1,), lambda b, bk, qk: (b,)),
+            pl.BlockSpec((1,), lambda b, bk, qk: (b,)),
+        ],
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D), bucket_vals.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buckets, qkeys, bucket_keys, bucket_vals)

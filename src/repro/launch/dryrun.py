@@ -1,0 +1,242 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analysis for the roofline report.
+
+MUST set the host-device override before ANY other import (jax locks device
+count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (LM_SHAPES, active_params, count_params,  # noqa: E402
+                           get_config, shape_applicable, shape_by_name,
+                           ARCH_IDS)
+from repro.launch import hlo_analysis, hw  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import axis_rules, default_rules  # noqa: E402
+from repro.launch.specs import (batch_pspec, cache_pspec_tree,  # noqa: E402
+                                opt_pspec_tree, param_pspec_tree, policy_for,
+                                serving_rules)
+from repro.launch.steps import (make_decode_step, make_prefill_step,  # noqa: E402
+                                make_train_step)
+from repro.models.lm import build_model  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+def _with_shardings(shape_tree, spec_tree, mesh):
+    def f(s, p):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, p))
+    return jax.tree.map(f, shape_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             attn_impl: str = None, note: str = "") -> dict:
+    multi = mesh_kind == "multi"
+    shape = shape_by_name(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "note": note}
+    if not shape_applicable(arch, shape_name):
+        rec.update(ok=True, skipped=True,
+                   reason="long_500k restricted to sub-quadratic archs "
+                          "(see DESIGN.md §4)")
+        return rec
+
+    cfg = get_config(arch)
+    if shape.kind == "train":
+        cfg = cfg.replace(remat="block")
+    if attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    rules = default_rules(multi)
+    if shape.kind == "decode":
+        rules = serving_rules(cfg, rules, mesh)
+    policy = policy_for(cfg, shape.kind)
+    if policy.expert_scheme != "ep_model":
+        cfg = cfg.replace(expert_scheme=policy.expert_scheme)
+        rec["expert_scheme"] = policy.expert_scheme
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(model.init_params, rng)
+    pspec = param_pspec_tree(params_shape, mesh, rules, policy)
+    params_in = _with_shardings(params_shape, pspec, mesh)
+    batch_shape = model.input_specs(shape)
+    bspec = batch_pspec(batch_shape, mesh, rules)
+    batch_in = _with_shardings(batch_shape, bspec, mesh)
+
+    t0 = time.time()
+    with axis_rules(mesh, rules):
+        if shape.kind == "train":
+            acfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+            opt_shape = jax.eval_shape(partial(adamw.init, acfg),
+                                       params_shape)
+            ospec = adamw.AdamWState(
+                step=P(),
+                mu=opt_pspec_tree(params_shape, mesh, rules, policy),
+                nu=opt_pspec_tree(params_shape, mesh, rules, policy))
+            opt_in = _with_shardings(opt_shape, ospec, mesh)
+            data_size = chips // int(mesh.shape.get("model", 1))
+            n_micro = max(1, shape.global_batch // data_size)
+            rec["n_micro"] = n_micro
+            grad_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            step = make_train_step(model, acfg, n_micro=n_micro,
+                                   grad_shardings=grad_sh)
+            jitted = jax.jit(
+                step, donate_argnums=(0, 1),
+                out_shardings=(
+                    jax.tree.map(lambda p: NamedSharding(mesh, p), pspec,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree.map(lambda p: NamedSharding(mesh, p), ospec,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    None))
+            lowered = jitted.lower(params_in, opt_in, batch_in)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(params_in, batch_in)
+        else:
+            cache_shape = model.cache_spec(shape.global_batch, shape.seq_len)
+            cspec = cache_pspec_tree(cfg, cache_shape, mesh, rules)
+            cache_in = _with_shardings(cache_shape, cspec, mesh)
+            step = make_decode_step(model)
+            jitted = jax.jit(step, donate_argnums=(1,))
+            lowered = jitted.lower(params_in, cache_in, batch_in)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- memory ----
+    ma = compiled.memory_analysis()
+    mem = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "peak_memory_in_bytes", "generated_code_size_in_bytes"):
+        mem[f] = int(getattr(ma, f, 0) or 0)
+    live = mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+    mem["live_bytes"] = live
+    # strict: CPU-reported temp included.  args: weights+caches+inputs only —
+    # the CPU backend double-buffers read-only loop carries that the TPU
+    # backend aliases, so decode temps are overstated (see EXPERIMENTS.md).
+    mem["fits_16g_strict"] = bool(live <= hw.HBM_BYTES)
+    mem["fits_16g_args"] = bool(
+        mem["argument_size_in_bytes"] <= hw.HBM_BYTES)
+    rec["memory"] = mem
+
+    # ---- XLA cost analysis (loop bodies counted once; for reference) ----
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+
+    # ---- loop-aware HLO analysis (per device) ----
+    t2 = time.time()
+    totals = hlo_analysis.analyze(compiled.as_text())
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    rec["hlo"] = {
+        "flops_per_device": totals.flops,
+        "bytes_per_device": totals.bytes,
+        "collective_bytes_per_device": totals.collective_bytes,
+        "by_collective": totals.by_collective,
+        "n_collectives": totals.n_collectives,
+        "trip_warnings": totals.trip_warnings[:8],
+        "bytes_by_op": dict(sorted(totals.bytes_by_op.items(),
+                                   key=lambda kv: -kv[1])[:12]),
+        "top_collectives": totals.top_collectives[:8],
+    }
+
+    # ---- roofline ----
+    n_act = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6 if shape.kind == "train" else 2) * n_act * tokens
+    terms = hw.roofline_terms(totals.flops, totals.bytes,
+                              totals.collective_bytes, chips)
+    dominant = max(terms, key=terms.get)
+    hlo_global = totals.flops * chips
+    rec["roofline"] = {
+        **terms,
+        "dominant": dominant,
+        "chips": chips,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "params": count_params(cfg),
+        "active_params": n_act,
+        "tokens_per_step": tokens,
+        # fraction of roofline: useful work time at peak / achievable step time
+        "roofline_fraction": (model_flops / chips / hw.PEAK_FLOPS_BF16)
+        / max(max(terms.values()), 1e-12),
+    }
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--note", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for mesh_kind in ("single", "multi"):
+            for arch in ARCH_IDS:
+                for sh in LM_SHAPES:
+                    cells.append((arch, sh.name, mesh_kind))
+    else:
+        cells.append((args.arch, args.shape, args.mesh))
+
+    for arch, shape_name, mesh_kind in cells:
+        tag = f"{arch}__{shape_name}__{mesh_kind}"
+        if args.note:
+            tag += f"__{args.note}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] {tag}: exists, skipping")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                           attn_impl=args.attn_impl, note=args.note)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        rec["wall_s"] = round(time.time() - t0, 2)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = ("SKIP" if rec.get("skipped")
+                  else "OK" if rec.get("ok") else "FAIL")
+        extra = ""
+        if rec.get("ok") and not rec.get("skipped"):
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']} frac={r['roofline_fraction']:.3f}"
+                     f" live={rec['memory']['live_bytes']/2**30:.2f}GiB")
+        print(f"[dryrun] {tag}: {status} ({rec['wall_s']}s){extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""TPU v5e hardware model used by the roofline analysis (targets, not the
+CPU runtime of this container)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3    # 16 GiB per chip
+
+CHIPS_PER_POD = 256
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, chips: int) -> dict:
+    """The three §Roofline terms, in seconds."""
+    return {
+        "compute_s": hlo_flops / PEAK_FLOPS_BF16,
+        "memory_s": hlo_bytes / HBM_BW,
+        "collective_s": collective_bytes / (ICI_BW),
+    }

@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run process
+forces 512 host devices via XLA_FLAGS before any jax import; everything else
+(smoke tests, benches) sees the real single device.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (dryrun.py "
+            f"sets this automatically)")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Generic helper for elastic re-meshing (runtime.elastic)."""
+    import jax
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,114 @@
+"""Logical-axis sharding: model code annotates tensors with *logical* axis
+names; a context-installed rule set maps them to mesh axes (or drops them).
+
+Keeping the mapping out of model code lets the same model lower on a laptop
+(no mesh: everything is a no-op), the 16x16 single-pod mesh, and the
+2x16x16 multi-pod mesh, and lets the hillclimb loop swap sharding schemes
+without touching the model.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, Axis]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, Axis]):
+    """Install logical->mesh axis rules for the enclosed trace."""
+    old = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+# Default logical->mesh mapping used by the launcher.  ``data`` composes the
+# pod axis so multi-pod is batch-parallel across pods by default.
+def default_rules(multi_pod: bool) -> Dict[str, Axis]:
+    data = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": data,            # batch dim of activations
+        "seq": None,              # sequence (train/prefill activations)
+        "kv_seq": None,           # KV-cache sequence dim (decode)
+        "embed": None,            # d_model
+        "heads": "model",         # attention heads / q heads
+        "kv_heads": "model",
+        "mlp": "model",           # ffn hidden
+        "vocab": "model",         # embedding/vocab-parallel
+        "experts": "model",       # MoE expert dim
+        "experts_data": data,     # expert dim on the data axis (serve EP)
+        "expert_fsdp": data,      # expert-weight E dim on data (serve EP)
+        "expert_mlp": None,       # per-expert hidden (already expert-sharded)
+        "ssm_inner": "model",     # mamba/rwkv channel dim
+        "kv_lora": None,          # MLA latent cache dim
+        "tp": "model",            # parameter tensor-parallel dim
+        "fsdp": data,             # parameter FSDP dim (policy-gated)
+        "opt_shard": data,        # ZeRO-1 optimizer-state sharding
+    }
+
+
+def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: Dict[str, Axis]) -> P:
+    """Map logical names to a PartitionSpec, dropping axes that do not divide
+    the corresponding dimension (divisibility-aware fallback)."""
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        if any(a in used for a in axes):
+            out.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size == 0 or dim % size != 0:
+            # try a prefix of the axis tuple that divides
+            ok = None
+            for cut in range(len(axes) - 1, 0, -1):
+                s = 1
+                for a in axes[:cut]:
+                    s *= mesh.shape[a]
+                if dim % s == 0:
+                    ok = axes[:cut]
+                    break
+            if ok is None:
+                out.append(None)
+                continue
+            axes = ok
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else tuple(axes))
+    return P(*out)
+
+
+def constraint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"constraint({logical}) vs rank-{x.ndim} tensor")
+    spec = resolve_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int],
+                   logical: Sequence[Optional[str]],
+                   rules: Dict[str, Axis]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh, rules))

@@ -1,0 +1,91 @@
+"""Step builders: train (grad-accum microbatching + AdamW) and serve steps.
+
+These are the functions the launcher jits with explicit shardings; the
+dry-run lowers exactly these, so what we roofline is what we would run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.lm import Model
+from repro.optim import adamw
+
+
+def microbatch_reshape(batch: Dict[str, jax.Array], n: int) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch.items():
+        if getattr(v, "ndim", 0) >= 1 and v.shape and v.shape[0] % n == 0:
+            out[k] = v.reshape((n, v.shape[0] // n) + v.shape[1:])
+        else:
+            out[k] = v
+    return out
+
+
+def make_train_step(model: Model, acfg: adamw.AdamWConfig,
+                    n_micro: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    grad_shardings: Any = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With n_micro > 1 the global batch is split along dim 0 and gradients are
+    accumulated in fp32 across a lax.scan — the compute/comm overlap knob:
+    GSPMD moves the gradient reduce-scatter of microbatch i under the compute
+    of microbatch i+1.  ``grad_shardings`` (a pytree of NamedSharding
+    matching params) pins the fp32 accumulator to the parameter layout so the
+    per-microbatch reduction is a reduce-scatter, not an all-reduce.
+    ``grad_transform`` hooks gradient compression."""
+
+    def loss_fn(p, b):
+        loss, metrics = model.train_loss(p, b)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro <= 1:
+            (loss, _metrics), grads = grad_fn(params, batch)
+            grads = _constrain(grads)
+        else:
+            mb = microbatch_reshape(batch, n_micro)
+
+            def acc_fn(carry, b):
+                gacc, lacc = carry
+                (loss, _m), g = grad_fn(params, b)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (_constrain(gacc), lacc + loss), None
+
+            zeros = _constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), _ = lax.scan(acc_fn, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, om = adamw.update(acfg, params, opt_state, grads)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch)
+    return decode_step

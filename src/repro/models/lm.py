@@ -1,0 +1,836 @@
+"""Model builders: every assigned architecture exposes the same API.
+
+    model = build_model(cfg)
+    loss, metrics   = model.train_loss(params, batch)
+    logits, cache   = model.prefill(params, batch)
+    logits, cache   = model.decode(params, cache, batch)
+
+Layer stacks are scanned (stacked leading L dim) so 60-layer models lower to
+compact HLO; the loss is computed with a sequence-chunked vocab projection so
+[B,S,V] logits are never materialised (V up to 256k).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.sharding import constraint
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention, attention_decode, bf16_grad,
+                                 dense, ffn, init_attention, init_ffn,
+                                 init_mla, init_moe, mla_attention,
+                                 mla_decode, moe_ffn, rms_norm)
+
+Params = Dict[str, Any]
+Batch = Dict[str, jax.Array]
+
+XENT_CHUNK = 256
+
+
+# ------------------------------------------------------------------ utilities
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _stack_init(init_one: Callable[[jax.Array], Params], rng, n: int) -> Params:
+    return jax.vmap(init_one)(jax.random.split(rng, n))
+
+
+def chunked_xent(h: jax.Array, w_head: jax.Array, targets: jax.Array,
+                 mask: Optional[jax.Array] = None,
+                 chunk: int = XENT_CHUNK) -> jax.Array:
+    """Mean next-token cross-entropy without materialising [B,S,V]."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    h_ = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    t_ = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+    if mask is None:
+        m_ = jnp.ones((nc, B, chunk), jnp.float32)
+    else:
+        m_ = mask.reshape(B, nc, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(acc, xs):
+        hc, tc, mc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc, w_head,
+                            preferred_element_type=jnp.float32)
+        logits = constraint(logits, "batch", "seq", "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss, cnt = acc
+        return (loss + ((lse - tgt) * mc).sum(), cnt + mc.sum()), None
+
+    (loss, cnt), _ = lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                              (h_, t_, m_))
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(h_last: jax.Array, w_head: jax.Array) -> jax.Array:
+    """h_last [B,D] -> [B,V] fp32."""
+    out = jnp.einsum("bd,dv->bv", h_last, w_head,
+                     preferred_element_type=jnp.float32)
+    return constraint(out, "batch", "vocab")
+
+
+# ===================================================================== dense
+def _init_block(rng, cfg: ModelConfig, dtype) -> Params:
+    k = jax.random.split(rng, 2)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    p["attn"] = init_mla(k[0], cfg, dtype) if cfg.mla else \
+        init_attention(k[0], cfg, dtype=dtype)
+    if cfg.moe:
+        p["moe"] = init_moe(k[1], cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(k[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_dense_block_for(rng, cfg: ModelConfig, d_ff: int, dtype) -> Params:
+    k = jax.random.split(rng, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_mla(k[0], cfg, dtype) if cfg.mla else
+            init_attention(k[0], cfg, dtype=dtype),
+            "ffn": init_ffn(k[1], cfg.d_model, d_ff, dtype)}
+
+
+def _block_fwd(p: Params, h: jax.Array, cfg: ModelConfig,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm transformer block; returns (h, moe_aux)."""
+    a = attention(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps), cfg) \
+        if not cfg.mla else \
+        mla_attention(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps), cfg)
+    h = h + a
+    hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe_ffn(p["moe"], hn, cfg)
+    else:
+        f, aux = ffn(p["ffn"], hn, cfg.hidden_act), jnp.float32(0)
+    h = h + f
+    return constraint(h, "batch", "seq", "embed"), aux
+
+
+def _block_prefill(p: Params, h: jax.Array, cfg: ModelConfig):
+    """Like _block_fwd but also returns this layer's KV cache entries."""
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        m = cfg.mla
+        B, S, _ = h.shape
+        ckv = rms_norm(dense(hn, p["attn"]["w_dkv"]), p["attn"]["kv_norm"],
+                       cfg.norm_eps)
+        from repro.models.layers import apply_rope, rope_angles
+        kr = dense(hn, p["attn"]["w_kr"]).reshape(B, S, 1, m.qk_rope_head_dim)
+        sin, cos = rope_angles(jnp.arange(S), m.qk_rope_head_dim,
+                               cfg.rope_theta)
+        kr = apply_rope(kr, sin, cos).reshape(B, S, m.qk_rope_head_dim)
+        kv = (ckv, kr)
+        a = mla_attention(p["attn"], hn, cfg)
+    else:
+        B, S, _ = h.shape
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        from repro.models.layers import apply_rope, rope_angles
+        k = dense(hn, p["attn"]["wk"], p["attn"].get("bk")).reshape(B, S, KV, hd)
+        v = dense(hn, p["attn"]["wv"], p["attn"].get("bv")).reshape(B, S, KV, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+        sin, cos = rope_angles(jnp.arange(S), hd, cfg.rope_theta)
+        kv = (apply_rope(k, sin, cos), v)
+        a = attention(p["attn"], hn, cfg)
+    h = h + a
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_ffn(p["moe"], hn2, cfg)
+    else:
+        f = ffn(p["ffn"], hn2, cfg.hidden_act)
+    return constraint(h + f, "batch", "seq", "embed"), kv
+
+
+def _block_decode(p: Params, h: jax.Array, cache, pos, cfg: ModelConfig):
+    """One decode block.  ``cache`` is read-only; returns the new token's KV
+    entries for the caller to write (append-merge decode)."""
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, ckv_new, kr_new = mla_decode(p["attn"], hn, cache[0], cache[1],
+                                        pos, cfg)
+        new_entries = (ckv_new, kr_new)
+    else:
+        a, k_new, v_new = attention_decode(p["attn"], hn, cache[0], cache[1],
+                                           pos, cfg)
+        new_entries = (k_new, v_new)
+    h = h + a
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_ffn(p["moe"], hn2, cfg)
+    else:
+        f = ffn(p["ffn"], hn2, cfg.hidden_act)
+    return h + f, new_entries
+
+
+# ============================================================= model wrapper
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Params]
+    train_loss: Callable[[Params, Batch], Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[[Params, Batch], Tuple[jax.Array, Any]]
+    decode: Callable[[Params, Any, Batch], Tuple[jax.Array, Any]]
+    cache_spec: Callable[[int, int], Any]
+    input_specs: Callable[[ShapeConfig], Dict[str, jax.ShapeDtypeStruct]]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.ssm and cfg.ssm.kind == "rwkv6":
+        return _build_rwkv6(cfg)
+    if cfg.ssm and cfg.ssm.kind == "mamba2":
+        return _build_zamba(cfg)
+    if cfg.encoder_decoder:
+        return _build_encdec(cfg)
+    return _build_decoder_lm(cfg)
+
+
+# ---------------------------------------------------- decoder-only (+moe/vlm)
+def _build_decoder_lm(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+    L = cfg.num_layers
+    mo = cfg.moe
+    n_prefix = mo.first_k_dense if mo else 0
+    n_scan = L - n_prefix
+    fe = cfg.frontend
+
+    def init_params(rng) -> Params:
+        ks = jax.random.split(rng, 6)
+        p: Params = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+            "layers": _stack_init(lambda k: _init_block(k, cfg, dt), ks[1],
+                                  n_scan),
+        }
+        if n_prefix:
+            p["prefix_layers"] = [
+                _init_dense_block_for(k, cfg, mo.dense_d_ff or cfg.d_ff, dt)
+                for k in jax.random.split(ks[2], n_prefix)]
+        if not cfg.tie_embeddings:
+            p["lm_head"] = (jax.random.normal(
+                ks[3], (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / math.sqrt(cfg.d_model)).astype(dt)
+        if fe:
+            p["frontend_proj"] = {
+                "w1": (jax.random.normal(ks[4], (fe.embed_dim, cfg.d_model),
+                                         jnp.float32)
+                       / math.sqrt(fe.embed_dim)).astype(dt),
+                "w2": (jax.random.normal(ks[5], (cfg.d_model, cfg.d_model),
+                                         jnp.float32)
+                       / math.sqrt(cfg.d_model)).astype(dt)}
+        return p
+
+    def head(p):
+        return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+    def embed_input(p, batch) -> jax.Array:
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        if fe:
+            img = dense(jax.nn.gelu(dense(
+                batch["frontend_embeds"].astype(dt),
+                p["frontend_proj"]["w1"])), p["frontend_proj"]["w2"])
+            h = jnp.concatenate([img, h], axis=1)
+        return constraint(h, "batch", "seq", "embed")
+
+    def backbone(p, h):
+        aux = jnp.float32(0)
+        for lp in p.get("prefix_layers", []):
+            h, a = _block_fwd(lp, h, cfg)
+            aux += a
+        body = lambda hh, lp: _block_fwd(lp, hh, cfg)
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        def f(hh, lp):
+            hh, a = body(hh, lp)
+            return hh, a
+        h, auxs = lax.scan(f, h, p["layers"])
+        return rms_norm(h, p["final_norm"], cfg.norm_eps), aux + auxs.sum()
+
+    def train_loss(p, batch):
+        h = embed_input(p, batch)
+        h, aux = backbone(p, h)
+        if fe:
+            n_img = fe.num_tokens
+            h = h[:, n_img:, :]
+        loss = chunked_xent(h, head(p), batch["targets"],
+                            batch.get("loss_mask"))
+        total = loss + 0.01 * aux if cfg.moe else loss
+        return total, {"xent": loss, "moe_aux": aux}
+
+    def prefill(p, batch):
+        h = embed_input(p, batch)
+        caches = []
+        for lp in p.get("prefix_layers", []):
+            h, kv = _block_prefill(lp, h, cfg)
+            caches.append(kv)
+        def f(hh, lp):
+            return _block_prefill(lp, hh, cfg)
+        h, kvs = lax.scan(f, h, p["layers"])
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], head(p))
+        cache = {"kv": kvs, "pos": jnp.int32(h.shape[1] - 1)}
+        if caches:
+            cache["prefix_kv"] = caches
+        return logits, cache
+
+    def decode(p, cache, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = constraint(h, "batch", "seq", "embed")
+        pos = batch["pos"]
+        new_prefix = []
+        for lp, kv in zip(p.get("prefix_layers", []),
+                          cache.get("prefix_kv", [])):
+            h, (n0, n1) = _block_decode(lp, h, kv, pos, cfg)
+            new_prefix.append(
+                (lax.dynamic_update_slice_in_dim(kv[0], n0, pos, axis=1),
+                 lax.dynamic_update_slice_in_dim(kv[1], n1, pos, axis=1)))
+
+        # append-merge decode: the stacked cache is a READ-ONLY loop
+        # invariant (captured, never written in-loop => no per-layer copies);
+        # each layer emits its new token's KV and ONE top-level DUS writes
+        # all layers at once.
+        c0, c1 = cache["kv"]
+
+        def f(hh, xs):
+            lp, i = xs
+            hh, (n0, n1) = _block_decode(lp, hh, (c0[i], c1[i]), pos, cfg)
+            return hh, (n0, n1)
+
+        h, (nk, nv) = lax.scan(f, h, (p["layers"], jnp.arange(n_scan)))
+        zero = jnp.zeros((), jnp.int32)
+        if cfg.mla:
+            idx = (zero, zero, pos, zero)
+        else:
+            idx = (zero, zero, pos, zero, zero)
+        ck = lax.dynamic_update_slice(cache["kv"][0], nk, idx)
+        cv = lax.dynamic_update_slice(cache["kv"][1], nv, idx)
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], head(p))
+        new_cache = {"kv": (ck, cv), "pos": pos}
+        if new_prefix:
+            new_cache["prefix_kv"] = new_prefix
+        return logits, new_cache
+
+    def cache_spec(B, T):
+        if cfg.mla:
+            m = cfg.mla
+            kv = (jax.ShapeDtypeStruct((n_scan, B, T, m.kv_lora_rank), dt),
+                  jax.ShapeDtypeStruct((n_scan, B, T, m.qk_rope_head_dim), dt))
+        else:
+            kv = (jax.ShapeDtypeStruct(
+                      (n_scan, B, T, cfg.num_kv_heads, cfg.head_dim), dt),
+                  jax.ShapeDtypeStruct(
+                      (n_scan, B, T, cfg.num_kv_heads, cfg.head_dim), dt))
+        spec = {"kv": kv, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        if n_prefix:
+            if cfg.mla:
+                m = cfg.mla
+                one = (jax.ShapeDtypeStruct((B, T, m.kv_lora_rank), dt),
+                       jax.ShapeDtypeStruct((B, T, m.qk_rope_head_dim), dt))
+            else:
+                one = (jax.ShapeDtypeStruct(
+                           (B, T, cfg.num_kv_heads, cfg.head_dim), dt),
+                       jax.ShapeDtypeStruct(
+                           (B, T, cfg.num_kv_heads, cfg.head_dim), dt))
+            spec["prefix_kv"] = [one] * n_prefix
+        return spec
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            n_txt = S - (fe.num_tokens if fe else 0)
+            d = {"tokens": jax.ShapeDtypeStruct((B, n_txt), i32),
+                 "targets": jax.ShapeDtypeStruct((B, n_txt), i32)}
+            if fe:
+                d["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (B, fe.num_tokens, fe.embed_dim), dt)
+            return d
+        if shape.kind == "prefill":
+            n_txt = S - (fe.num_tokens if fe else 0)
+            d = {"tokens": jax.ShapeDtypeStruct((B, n_txt), i32)}
+            if fe:
+                d["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (B, fe.num_tokens, fe.embed_dim), dt)
+            return d
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return Model(cfg, init_params, train_loss, prefill, decode, cache_spec,
+                 input_specs)
+
+
+# ------------------------------------------------------------ zamba2 (hybrid)
+def _build_zamba(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+    L = cfg.num_layers
+    every = cfg.hybrid_attn_every
+    n_inv = (L + every - 1) // every if every else 0
+    d_in, H, P, N, conv_dim = ssm_mod.mamba2_dims(cfg)
+    K = cfg.ssm.conv_kernel
+    shared_cfg = cfg.replace(num_heads=cfg.hybrid_attn_heads or cfg.num_heads)
+
+    def init_shared(rng) -> Params:
+        k = jax.random.split(rng, 2)
+        return {
+            "ln1": jnp.zeros((2 * cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": init_attention(k[0], shared_cfg, d_in=2 * cfg.d_model,
+                                   dtype=dt),
+            "ffn": init_ffn(k[1], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def init_params(rng) -> Params:
+        ks = jax.random.split(rng, 5)
+        return {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "layers": _stack_init(lambda k: init_mamba2_layer(k), ks[1], L),
+            "shared": init_shared(ks[2]),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+            "lm_head": (jax.random.normal(ks[3],
+                                          (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32)
+                        / math.sqrt(cfg.d_model)).astype(dt),
+        }
+
+    def init_mamba2_layer(rng) -> Params:
+        k = jax.random.split(rng, 2)
+        return {"ln": jnp.zeros((cfg.d_model,), dt),
+                "mamba": ssm_mod.init_mamba2(k[0], cfg, dt)}
+
+    def shared_block(sp, h, x0):
+        z = jnp.concatenate([h, x0], axis=-1)
+        a = attention(sp["attn"], rms_norm(z, sp["ln1"], cfg.norm_eps),
+                      shared_cfg, heads=shared_cfg.num_heads)
+        h = bf16_grad(h + a)
+        f = ffn(sp["ffn"], rms_norm(h, sp["ln2"], cfg.norm_eps),
+                cfg.hidden_act)
+        return bf16_grad(h + f)
+
+    def shared_block_decode(sp, h, x0, kv, pos):
+        z = jnp.concatenate([h, x0], axis=-1)
+        a, k_new, v_new = attention_decode(
+            sp["attn"], rms_norm(z, sp["ln1"], cfg.norm_eps), kv[0], kv[1],
+            pos, shared_cfg, heads=shared_cfg.num_heads)
+        h = h + a
+        f = ffn(sp["ffn"], rms_norm(h, sp["ln2"], cfg.norm_eps),
+                cfg.hidden_act)
+        new_kv = (lax.dynamic_update_slice_in_dim(kv[0], k_new, pos, axis=1),
+                  lax.dynamic_update_slice_in_dim(kv[1], v_new, pos, axis=1))
+        return h + f, new_kv
+
+    def _seg(p, i0, i1):
+        return jax.tree.map(lambda a: a[i0:i1], p["layers"])
+
+    def backbone(p, h):
+        x0 = h
+
+        def mamba_body(hh, lp):
+            y = ssm_mod.mamba2_block(
+                lp["mamba"], rms_norm(hh, lp["ln"], cfg.norm_eps), cfg)
+            return constraint(bf16_grad(hh + y), "batch", "seq", "embed"), \
+                None
+
+        if cfg.remat == "block":
+            mamba_body = jax.checkpoint(mamba_body)
+        i = 0
+        while i < L:
+            if every and i % every == 0:
+                h = shared_block(p["shared"], h, x0)
+            j = min(L, i + (every or L))
+            h, _ = lax.scan(mamba_body, h, _seg(p, i, j))
+            i = j
+        return rms_norm(h, p["final_norm"], cfg.norm_eps)
+
+    def train_loss(p, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = constraint(h, "batch", "seq", "embed")
+        h = backbone(p, h)
+        loss = chunked_xent(h, p["lm_head"], batch["targets"],
+                            batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    def prefill(p, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        x0 = h
+        B, S, _ = h.shape
+        convs, ssds, shared_kv = [], [], []
+
+        def mamba_body(hh, lp):
+            y, st, ct = ssm_mod.mamba2_block_with_state(
+                lp["mamba"], rms_norm(hh, lp["ln"], cfg.norm_eps), cfg)
+            return hh + y, (st, ct)
+
+        i = 0
+        while i < L:
+            if every and i % every == 0:
+                hn = rms_norm(jnp.concatenate([h, x0], -1),
+                              p["shared"]["ln1"], cfg.norm_eps)
+                KVh, hd = cfg.num_kv_heads, cfg.head_dim
+                from repro.models.layers import apply_rope, rope_angles
+                k = dense(hn, p["shared"]["attn"]["wk"]).reshape(B, S, KVh, hd)
+                v = dense(hn, p["shared"]["attn"]["wv"]).reshape(B, S, KVh, hd)
+                sin, cos = rope_angles(jnp.arange(S), hd, cfg.rope_theta)
+                shared_kv.append((apply_rope(k, sin, cos), v))
+                h = shared_block(p["shared"], h, x0)
+            j = min(L, i + (every or L))
+            h, (st, ct) = lax.scan(mamba_body, h, _seg(p, i, j))
+            convs.append(ct)
+            ssds.append(st)
+            i = j
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        cache = {"conv": jnp.concatenate(convs, 0),
+                 "ssd": jnp.concatenate(ssds, 0),
+                 "shared_kv": shared_kv,
+                 "x0_last": x0[:, -1, :],
+                 "pos": jnp.int32(S - 1)}
+        return logits, cache
+
+    def decode(p, cache, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        x0 = h
+        pos = batch["pos"]
+
+        def mamba_body(hh, xs):
+            lp, conv, ssd = xs
+            y, conv2, ssd2 = ssm_mod.mamba2_decode(
+                lp["mamba"], rms_norm(hh, lp["ln"], cfg.norm_eps), conv, ssd,
+                cfg)
+            return hh + y, (conv2, ssd2)
+
+        new_conv, new_ssd, new_shared = [], [], []
+        i, seg = 0, 0
+        while i < L:
+            if every and i % every == 0:
+                h2, kv2 = shared_block_decode(
+                    p["shared"], h, x0, cache["shared_kv"][len(new_shared)],
+                    pos)
+                h = h2
+                new_shared.append(kv2)
+            j = min(L, i + (every or L))
+            n = j - i
+            conv_seg = lax.dynamic_slice_in_dim(cache["conv"], i, n, 0)
+            ssd_seg = lax.dynamic_slice_in_dim(cache["ssd"], i, n, 0)
+            h, (c2, s2) = lax.scan(mamba_body, h,
+                                   (_seg(p, i, j), conv_seg, ssd_seg))
+            new_conv.append(c2)
+            new_ssd.append(s2)
+            i = j
+            seg += 1
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        cache = {"conv": jnp.concatenate(new_conv, 0),
+                 "ssd": jnp.concatenate(new_ssd, 0),
+                 "shared_kv": new_shared,
+                 "x0_last": x0[:, -1, :],
+                 "pos": pos}
+        return logits, cache
+
+    def cache_spec(B, T):
+        KVh, hd = cfg.num_kv_heads, cfg.head_dim
+        one_kv = (jax.ShapeDtypeStruct((B, T, KVh, hd), dt),
+                  jax.ShapeDtypeStruct((B, T, KVh, hd), dt))
+        return {"conv": jax.ShapeDtypeStruct((L, B, K - 1, conv_dim), dt),
+                "ssd": jax.ShapeDtypeStruct((L, B, H, N, P), jnp.float32),
+                "shared_kv": [one_kv] * n_inv,
+                "x0_last": jax.ShapeDtypeStruct((B, cfg.d_model), dt),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return Model(cfg, init_params, train_loss, prefill, decode, cache_spec,
+                 input_specs)
+
+
+# --------------------------------------------------------------------- rwkv6
+def _build_rwkv6(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+    L = cfg.num_layers
+    H, N = cfg.num_heads, cfg.ssm.head_dim
+
+    def init_layer(rng) -> Params:
+        return {"ln1": jnp.zeros((cfg.d_model,), dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "mix": ssm_mod.init_rwkv6(rng, cfg, dt)}
+
+    def init_params(rng) -> Params:
+        ks = jax.random.split(rng, 4)
+        return {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "ln0": jnp.zeros((cfg.d_model,), dt),
+            "layers": _stack_init(init_layer, ks[1], L),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+            "lm_head": (jax.random.normal(ks[2],
+                                          (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32)
+                        / math.sqrt(cfg.d_model)).astype(dt),
+        }
+
+    def layer_fwd(lp, h, s_att, s_wkv, s_chan):
+        a, s_att2, s_wkv2 = ssm_mod.rwkv6_time_mix(
+            lp["mix"], rms_norm(h, lp["ln1"], cfg.norm_eps), s_att, s_wkv,
+            cfg)
+        h = h + a
+        c, s_chan2 = ssm_mod.rwkv6_channel_mix(
+            lp["mix"], rms_norm(h, lp["ln2"], cfg.norm_eps), s_chan)
+        h = h + c
+        return constraint(h, "batch", "seq", "embed"), s_att2, s_wkv2, s_chan2
+
+    def _zero_states(B):
+        return (jnp.zeros((L, B, cfg.d_model), dt),
+                jnp.zeros((L, B, H, N, N), jnp.float32),
+                jnp.zeros((L, B, cfg.d_model), dt))
+
+    def backbone(p, h, states):
+        s_att, s_wkv, s_chan = states
+
+        def body(hh, xs):
+            lp, sa, sw, sc = xs
+            hh, sa2, sw2, sc2 = layer_fwd(lp, hh, sa, sw, sc)
+            return hh, (sa2, sw2, sc2)
+
+        fn = jax.checkpoint(body) if cfg.remat == "block" else body
+        h, (sa, sw, sc) = lax.scan(fn, h, (p["layers"], s_att, s_wkv, s_chan))
+        return rms_norm(h, p["final_norm"], cfg.norm_eps), (sa, sw, sc)
+
+    def train_loss(p, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = rms_norm(h, p["ln0"], cfg.norm_eps)
+        h = constraint(h, "batch", "seq", "embed")
+        h, _ = backbone(p, h, _zero_states(h.shape[0]))
+        loss = chunked_xent(h, p["lm_head"], batch["targets"],
+                            batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    def prefill(p, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = rms_norm(h, p["ln0"], cfg.norm_eps)
+        B = h.shape[0]
+        h, (sa, sw, sc) = backbone(p, h, _zero_states(B))
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        cache = {"shift_att": sa, "wkv": sw, "shift_chan": sc,
+                 "pos": jnp.int32(batch["tokens"].shape[1] - 1)}
+        return logits, cache
+
+    def decode(p, cache, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = rms_norm(h, p["ln0"], cfg.norm_eps)
+        h, (sa, sw, sc) = backbone(
+            p, h, (cache["shift_att"], cache["wkv"], cache["shift_chan"]))
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        return logits, {"shift_att": sa, "wkv": sw, "shift_chan": sc,
+                        "pos": cache["pos"] + 1}
+
+    def cache_spec(B, T):
+        return {"shift_att": jax.ShapeDtypeStruct((L, B, cfg.d_model), dt),
+                "wkv": jax.ShapeDtypeStruct((L, B, H, N, N), jnp.float32),
+                "shift_chan": jax.ShapeDtypeStruct((L, B, cfg.d_model), dt),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return Model(cfg, init_params, train_loss, prefill, decode, cache_spec,
+                 input_specs)
+
+
+# ----------------------------------------------------------- encoder-decoder
+def _build_encdec(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+    Ld, Le = cfg.num_layers, cfg.num_encoder_layers
+    fe = cfg.frontend
+
+    def init_enc_layer(rng) -> Params:
+        k = jax.random.split(rng, 2)
+        return {"ln1": jnp.zeros((cfg.d_model,), dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "attn": init_attention(k[0], cfg, dtype=dt),
+                "ffn": init_ffn(k[1], cfg.d_model, cfg.d_ff, dt)}
+
+    def init_dec_layer(rng) -> Params:
+        k = jax.random.split(rng, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "ln3": jnp.zeros((cfg.d_model,), dt),
+                "self_attn": init_attention(k[0], cfg, dtype=dt),
+                "cross_attn": init_attention(k[1], cfg, dtype=dt),
+                "ffn": init_ffn(k[2], cfg.d_model, cfg.d_ff, dt)}
+
+    def init_params(rng) -> Params:
+        ks = jax.random.split(rng, 6)
+        return {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+            "frontend_proj": (jax.random.normal(
+                ks[1], (fe.embed_dim, cfg.d_model), jnp.float32)
+                / math.sqrt(fe.embed_dim)).astype(dt),
+            "enc_layers": _stack_init(init_enc_layer, ks[2], Le),
+            "enc_norm": jnp.zeros((cfg.d_model,), dt),
+            "dec_layers": _stack_init(init_dec_layer, ks[3], Ld),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+            "lm_head": (jax.random.normal(ks[4],
+                                          (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32)
+                        / math.sqrt(cfg.d_model)).astype(dt),
+        }
+
+    def encode(p, frames):
+        h = dense(frames.astype(dt), p["frontend_proj"])
+        h = constraint(h, "batch", "seq", "embed")
+
+        def body(hh, lp):
+            a = attention(lp["attn"], rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                          cfg, causal=False)
+            hh = hh + a
+            f = ffn(lp["ffn"], rms_norm(hh, lp["ln2"], cfg.norm_eps),
+                    cfg.hidden_act)
+            return constraint(hh + f, "batch", "seq", "embed"), None
+
+        fn = jax.checkpoint(body) if cfg.remat == "block" else body
+        h, _ = lax.scan(fn, h, p["enc_layers"])
+        return rms_norm(h, p["enc_norm"], cfg.norm_eps)
+
+    def dec_block(lp, h, enc_out):
+        a = attention(lp["self_attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                      cfg, causal=True)
+        h = h + a
+        x = attention(lp["cross_attn"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                      cfg, causal=False, kv_x=enc_out, use_rope=False)
+        h = h + x
+        f = ffn(lp["ffn"], rms_norm(h, lp["ln3"], cfg.norm_eps),
+                cfg.hidden_act)
+        return constraint(h + f, "batch", "seq", "embed")
+
+    def train_loss(p, batch):
+        enc_out = encode(p, batch["frames"])
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        h = constraint(h, "batch", "seq", "embed")
+
+        def body(hh, lp):
+            return dec_block(lp, hh, enc_out), None
+
+        fn = jax.checkpoint(body) if cfg.remat == "block" else body
+        h, _ = lax.scan(fn, h, p["dec_layers"])
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        loss = chunked_xent(h, p["lm_head"], batch["targets"],
+                            batch.get("loss_mask"))
+        return loss, {"xent": loss}
+
+    def prefill(p, batch):
+        from repro.models.layers import apply_rope, rope_angles
+        enc_out = encode(p, batch["frames"])
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        B, S, _ = h.shape
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def body(hh, lp):
+            hn = rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            k = dense(hn, lp["self_attn"]["wk"]).reshape(B, S, KV, hd)
+            v = dense(hn, lp["self_attn"]["wv"]).reshape(B, S, KV, hd)
+            sin, cos = rope_angles(jnp.arange(S), hd, cfg.rope_theta)
+            k = apply_rope(k, sin, cos)
+            xk = dense(enc_out, lp["cross_attn"]["wk"]).reshape(
+                B, enc_out.shape[1], KV, hd)
+            xv = dense(enc_out, lp["cross_attn"]["wv"]).reshape(
+                B, enc_out.shape[1], KV, hd)
+            return dec_block(lp, hh, enc_out), (k, v, xk, xv)
+
+        h, (ks_, vs_, xks, xvs) = lax.scan(body, h, p["dec_layers"])
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        cache = {"k": ks_, "v": vs_, "xk": xks, "xv": xvs,
+                 "pos": jnp.int32(S - 1)}
+        return logits, cache
+
+    def decode(p, cache, batch):
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+        pos = batch["pos"]
+
+        def body(hh, xs):
+            lp, ck, cv, xk, xv = xs
+            a, k_new, v_new = attention_decode(
+                lp["self_attn"], rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                ck, cv, pos, cfg)
+            hh = hh + a
+            # cross attention against the precomputed encoder bank
+            from repro.models.layers import decode_attention as dec_attn
+            hn = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            B = hh.shape[0]
+            q = dense(hn, lp["cross_attn"]["wq"]).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim)
+            o = dec_attn(q, xk, xv, jnp.int32(xk.shape[1] - 1))
+            o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(hh.dtype)
+            hh = hh + dense(o, lp["cross_attn"]["wo"])
+            f = ffn(lp["ffn"], rms_norm(hh, lp["ln3"], cfg.norm_eps),
+                    cfg.hidden_act)
+            return hh + f, (k_new, v_new)
+
+        h, (nk1, nv1) = lax.scan(
+            body, h, (p["dec_layers"], cache["k"], cache["v"], cache["xk"],
+                      cache["xv"]))
+        zero = jnp.zeros((), jnp.int32)
+        idx = (zero, zero, pos, zero, zero)
+        nk = lax.dynamic_update_slice(cache["k"], nk1, idx)
+        nv = lax.dynamic_update_slice(cache["v"], nv1, idx)
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = logits_last(h[:, -1, :], p["lm_head"])
+        return logits, {"k": nk, "v": nv, "xk": cache["xk"],
+                        "xv": cache["xv"], "pos": pos}
+
+    def cache_spec(B, T):
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        arr = lambda: jax.ShapeDtypeStruct((Ld, B, T, KV, hd), dt)
+        return {"k": arr(), "v": arr(), "xk": arr(), "xv": arr(),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, fe.embed_dim), dt),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, fe.embed_dim), dt),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return Model(cfg, init_params, train_loss, prefill, decode, cache_spec,
+                 input_specs)

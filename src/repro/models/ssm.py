@@ -1,0 +1,373 @@
+"""Mamba2 (SSD, chunked) and RWKV6 (Finch, data-dependent decay) blocks.
+
+Both are written so train/prefill use chunk-parallel / precomputed-projection
+forms (MXU-friendly) and decode is an O(1)-per-token state update — the
+property that makes these the only archs running the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.launch.sharding import constraint
+from repro.models.layers import bf16_grad, dense, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------- mamba2
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return d_in, heads, s.head_dim, s.state_dim, conv_dim
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """Projections are stored per-segment (z/x/B/C/dt and per-stream convs)
+    rather than as Mamba2's fused in_proj: mathematically identical, but each
+    matrix column-shards cleanly on the model axis (DESIGN.md §8)."""
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    d_in, H, P, N, conv_dim = mamba2_dims(cfg)
+    gn = s.n_groups * N
+    k = jax.random.split(rng, 8)
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dtype)
+    return {
+        "w_z": w(k[0], (D, d_in), D),
+        "w_x": w(k[1], (D, d_in), D),
+        "w_Bm": w(k[2], (D, gn), D),
+        "w_Cm": w(k[3], (D, gn), D),
+        "w_dt": w(k[4], (D, H), D),
+        "conv_x": w(k[5], (s.conv_kernel, d_in), s.conv_kernel),
+        "conv_B": w(k[6], (s.conv_kernel, gn), s.conv_kernel),
+        "conv_C": w(k[7], (s.conv_kernel, gn), s.conv_kernel),
+        "conv_bx": jnp.zeros((d_in,), dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "w_out": w(k[3], (d_in, D), d_in),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x [B,S,C]; w [K,C]."""
+    K = w.shape[0]
+    y = lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding=[(K - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return y + b
+
+
+def ssd_chunked(xs: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (Mamba2 §6).  xs [B,S,H,P]; dt [B,S,H]; A [H] (<0);
+    Bm/Cm [B,S,G,N].  Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    B_, S, H, P = xs.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    x_ = xs.reshape(B_, nc, Q, G, rep, P).astype(jnp.float32)
+    dt_ = dt.reshape(B_, nc, Q, G, rep).astype(jnp.float32)
+    Bm_ = Bm.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    Cm_ = Cm.reshape(B_, nc, Q, G, N).astype(jnp.float32)
+    A_ = A.reshape(G, rep)
+
+    dA = dt_ * A_                                          # [B,nc,Q,G,rep] <=0
+    cum = jnp.cumsum(dA, axis=2)
+    dtx = dt_[..., None] * x_                              # [B,nc,Q,G,rep,P]
+
+    # intra-chunk (quadratic within chunk)
+    CB = jnp.einsum("bcign,bcjgn->bcgij", Cm_, Bm_)        # [B,nc,G,Q,Q]
+    diff = cum[:, :, :, None] - cum[:, :, None, :, :]      # i,j -> [B,nc,Q,Q,G,rep]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    ldec = jnp.where(tri[None, None, :, :, None, None], diff, -jnp.inf)
+    decay = jnp.exp(ldec)                                  # [B,nc,Q,Q,G,rep]
+    M = CB.transpose(0, 1, 3, 4, 2)[..., None] * decay     # [B,nc,Q,Q,G,rep]
+    y_intra = jnp.einsum("bcijgr,bcjgrp->bcigrp", M, dtx)
+
+    # chunk-local end states
+    dec_end = jnp.exp(cum[:, :, -1:, :, :] - cum)          # [B,nc,Q,G,rep]
+    S_loc = jnp.einsum("bcjgr,bcjgn,bcjgrp->bcgrnp", dec_end, Bm_, dtx)
+
+    # inter-chunk recurrence
+    chunk_dec = jnp.exp(cum[:, :, -1])                     # [B,nc,G,rep]
+    if init_state is None:
+        s0 = jnp.zeros((B_, G, rep, N, P), jnp.float32)
+    else:
+        s0 = init_state.reshape(B_, G, rep, N, P).astype(jnp.float32)
+
+    def step(s_prev, inp):
+        s_loc, cdec = inp
+        return s_prev * cdec[..., None, None] + s_loc, s_prev
+
+    s_final, s_prevs = lax.scan(
+        step, s0, (S_loc.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_dec.transpose(1, 0, 2, 3)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4, 5)          # [B,nc,G,rep,N,P]
+
+    y_inter = jnp.einsum("bcign,bcgrnp->bcigrp", Cm_, s_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y.astype(xs.dtype), s_final.reshape(B_, H, N, P)
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                 ) -> jax.Array:
+    """Train/prefill Mamba2 block.  x [B,S,D] -> [B,S,D]."""
+    y, _, _ = mamba2_block_with_state(p, x, cfg)
+    return y
+
+
+def mamba2_block_with_state(p: Params, x: jax.Array, cfg: ModelConfig
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    d_in, H, P, N, conv_dim = mamba2_dims(cfg)
+    gn = s.n_groups * N
+    # bf16 gradient boundary on each TP-sharded projection output: the
+    # cotangents feeding these dots' backward all-reduces otherwise arrive
+    # in fp32 from the silu/norm internals (2x collective volume)
+    z = bf16_grad(dense(x, p["w_z"]))
+    x_pre = bf16_grad(dense(x, p["w_x"]))
+    B_pre = bf16_grad(dense(x, p["w_Bm"]))
+    C_pre = bf16_grad(dense(x, p["w_Cm"]))
+    dt = bf16_grad(dense(x, p["w_dt"]))
+    conv_tail = jnp.concatenate(
+        [x_pre, B_pre, C_pre], axis=-1)[:, -(s.conv_kernel - 1):, :]
+    def conv(v, w, b):
+        return jax.nn.silu(_causal_conv(v, w, b).astype(jnp.float32)) \
+            .astype(x.dtype)
+    xs = conv(x_pre, p["conv_x"], p["conv_bx"])
+    xs = constraint(xs, "batch", "seq", "ssm_inner").reshape(B, S, H, P)
+    Bm = conv(B_pre, p["conv_B"], p["conv_bB"]).reshape(B, S, s.n_groups, N)
+    Cm = conv(C_pre, p["conv_C"], p["conv_bC"]).reshape(B, S, s.n_groups, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk)
+    y = y + (p["D_skip"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return dense(y, p["w_out"]), state, conv_tail
+
+
+def mamba2_decode(p: Params, x: jax.Array, conv_state: jax.Array,
+                  ssd_state: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token Mamba2 step.  x [B,1,D]; conv_state [B,K-1,conv_dim];
+    ssd_state [B,H,N,P]."""
+    s: SSMConfig = cfg.ssm
+    B = x.shape[0]
+    d_in, H, P, N, conv_dim = mamba2_dims(cfg)
+    gn = s.n_groups * N
+    x0 = x[:, 0]
+    z = dense(x0, p["w_z"])
+    new_pre = jnp.concatenate([dense(x0, p["w_x"]), dense(x0, p["w_Bm"]),
+                               dense(x0, p["w_Cm"])], axis=-1)
+    dt = dense(x0, p["w_dt"])
+
+    window = jnp.concatenate([conv_state, new_pre[:, None, :]], axis=1)
+    conv_state = window[:, 1:, :]
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bB"], p["conv_bC"]],
+                             axis=-1)
+    xBC = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+    xBC = jax.nn.silu(xBC).astype(x.dtype)
+
+    xs = xBC[..., :d_in].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC[..., d_in:d_in + gn].reshape(B, s.n_groups, N)
+    Cm = xBC[..., d_in + gn:].reshape(B, s.n_groups, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                   # [B,H]
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)   # [B,H,N]
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dBx = dt[..., None, None] * Bh[..., :, None] * xs[..., None, :]
+    state = ssd_state.astype(jnp.float32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + p["D_skip"][:, None] * xs
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return dense(y, p["w_out"])[:, None, :], conv_state, state.astype(ssd_state.dtype)
+
+
+# --------------------------------------------------------------------- rwkv6
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_rwkv6(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    D = cfg.d_model
+    H = cfg.num_heads
+    N = cfg.ssm.head_dim
+    assert H * N == D, (H, N, D)
+    k = jax.random.split(rng, 10)
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dtype)
+    return {
+        "mu_base": jnp.zeros((D,), dtype),
+        "mu": jnp.zeros((5, D), dtype),                    # r,k,v,w,g lerp
+        "lora_A": w(k[0], (D, 5 * LORA_MIX), D),
+        "lora_B": w(k[1], (5, LORA_MIX, D), LORA_MIX),
+        "w0": jnp.full((D,), -0.6, jnp.float32),           # decay base
+        "decay_A": w(k[2], (D, LORA_DECAY), D),
+        "decay_B": w(k[3], (LORA_DECAY, D), LORA_DECAY),
+        "wr": w(k[4], (D, D), D),
+        "wk": w(k[5], (D, D), D),
+        "wv": w(k[6], (D, D), D),
+        "wg": w(k[7], (D, D), D),
+        "u": jnp.zeros((H, N), jnp.float32),               # bonus
+        "ln_scale": jnp.ones((D,), jnp.float32),
+        "ln_bias": jnp.zeros((D,), jnp.float32),
+        "wo": w(k[8], (D, D), D),
+        "cm_mu_k": jnp.zeros((D,), dtype),
+        "cm_mu_r": jnp.zeros((D,), dtype),
+        "cm_wk": w(k[9], (D, cfg.d_ff), D),
+        "cm_wv": w(k[0], (cfg.d_ff, D), cfg.d_ff),
+        "cm_wr": w(k[1], (D, D), D),
+    }
+
+
+def _group_norm_heads(y: jax.Array, scale: jax.Array, bias: jax.Array,
+                      H: int, eps: float = 64e-5) -> jax.Array:
+    """GroupNorm with one group per head; y [...,D]."""
+    shp = y.shape
+    y = y.reshape(shp[:-1] + (H, shp[-1] // H)).astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * lax.rsqrt(var + eps)
+    y = y.reshape(shp)
+    return y * scale + bias
+
+
+def rwkv6_time_mix(p: Params, x: jax.Array, shift_state: jax.Array,
+                   wkv_state: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,S,D]; shift_state [B,D] (x_{-1}); wkv_state [B,H,N,N] fp32.
+    Returns (out, new_shift, new_wkv)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    N = cfg.ssm.head_dim
+    x_prev = jnp.concatenate([shift_state[:, None, :].astype(x.dtype),
+                              x[:, :-1, :]], axis=1)
+    dx = x_prev - x
+    xxx = x + dx * p["mu_base"]
+    st = jnp.tanh(dense(xxx, p["lora_A"])).reshape(B, S, 5, LORA_MIX)
+    adj = jnp.einsum("bsfr,frd->bsfd", st, p["lora_B"])
+    mix = x[:, :, None, :] + dx[:, :, None, :] * (p["mu"] + adj)
+    xr, xk, xv, xw, xg = [mix[:, :, i, :] for i in range(5)]
+
+    r = dense(xr, p["wr"]).reshape(B, S, H, N).astype(jnp.float32)
+    kk = dense(xk, p["wk"]).reshape(B, S, H, N).astype(jnp.float32)
+    v = dense(xv, p["wv"]).reshape(B, S, H, N).astype(jnp.float32)
+    g = jax.nn.silu(dense(xg, p["wg"]).astype(jnp.float32))
+    ww = p["w0"] + dense(jnp.tanh(dense(xw, p["decay_A"])), p["decay_B"]) \
+        .astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, N)          # decay in (0,1)
+    u = p["u"]
+
+    chunk = cfg.ssm.chunk if cfg.ssm else 0
+    if S > 1 and chunk and S % min(chunk, S) == 0:
+        y, new_state = _rwkv6_chunked(r, kk, v, w, u,
+                                      wkv_state.astype(jnp.float32),
+                                      min(chunk, S))
+    else:
+        def step(state, inp):
+            rt, kt, vt, wt = inp                           # [B,H,N]
+            kv = kt[..., :, None] * vt[..., None, :]       # [B,H,N,N]
+            yt = jnp.einsum("bhi,bhij->bhj", rt,
+                            state + u[..., :, None] * kv)
+            state = wt[..., :, None] * state + kv
+            return state, yt
+
+        xs = (r.transpose(1, 0, 2, 3), kk.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+        new_state, ys = lax.scan(step, wkv_state.astype(jnp.float32), xs)
+        y = ys.transpose(1, 0, 2, 3)
+    y = y.reshape(B, S, D)                                 # fp32
+    y = _group_norm_heads(y, p["ln_scale"], p["ln_bias"], H)
+    y = (y * g).astype(x.dtype)
+    return dense(y, p["wo"]), x[:, -1, :], new_state.astype(wkv_state.dtype)
+
+
+def _rwkv6_chunked(r, k, v, w, u, s0, Q: int):
+    """Exact chunk-parallel RWKV6 recurrence (hillclimb: the per-step scan
+    writes the [B,H,N,N] state to HBM 4096x per layer; chunking cuts the
+    sequential depth to S/Q and turns the work into MXU matmuls).
+
+    r/k/v/w [B,S,H,N] fp32; u [H,N]; s0 [B,H,N,N].
+    y_t = r_t.(S_{t-1} + diag(u k_t) v_t);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Within a chunk, with cl = cumsum(log w):
+      y_t = (r_t*exp(cl_{t-1})) . S_0
+          + sum_{j<t} (sum_n r_t k_j exp(cl_{t-1}-cl_j))_n v_j
+          + (r_t . (u*k_t)) v_t
+    """
+    B, S, H, N = r.shape
+    nc = S // Q
+    resh = lambda t: t.reshape(B, nc, Q, H, N).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)    # [nc,B,H,Q,N]
+    logw = jnp.log(jnp.maximum(wc, 1e-12))
+    cl = jnp.cumsum(logw, axis=-2)                         # inclusive
+    cl_prev = cl - logw                                    # exclusive
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)           # strict lower
+
+    def chunk_step(S_state, inp):
+        rq, kq, vq, clq, clprevq = inp                     # [B,H,Q,N]
+        # inter-chunk: r decayed back to chunk start, applied to carry state
+        y_inter = jnp.einsum("bhqn,bhnm->bhqm",
+                             rq * jnp.exp(clprevq), S_state)
+        # intra-chunk pairwise decays (exact, stable: exponent <= 0)
+        dd = clprevq[..., :, None, :] - clq[..., None, :, :]  # [B,H,Q,Q,N]
+        dd = jnp.where(tri[None, None, :, :, None], dd, -jnp.inf)
+        s = jnp.einsum("bhtn,bhjn,bhtjn->bhtj", rq, kq, jnp.exp(dd))
+        y_intra = jnp.einsum("bhtj,bhjm->bhtm", s, vq)
+        # diagonal bonus term
+        y_diag = jnp.einsum("bhqn,bhqn->bhq", rq, kq * u[:, None, :]) \
+            [..., None] * vq
+        # state to chunk end
+        dec_end = jnp.exp(clq[..., -1:, :] - clq)          # [B,H,Q,N]
+        S_new = S_state * jnp.exp(clq[..., -1, :])[..., :, None] \
+            + jnp.einsum("bhjn,bhjm->bhnm", kq * dec_end, vq)
+        return S_new, y_inter + y_intra + y_diag
+
+    s_final, ys = lax.scan(chunk_step, s0, (rc, kc, vc, cl, cl_prev))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return y, s_final
+
+
+def rwkv6_channel_mix(p: Params, x: jax.Array, shift_state: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    x_prev = jnp.concatenate([shift_state[:, None, :].astype(x.dtype),
+                              x[:, :-1, :]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(dense(xk, p["cm_wk"]).astype(jnp.float32)))
+    k = constraint(k.astype(x.dtype), "batch", "seq", "mlp")
+    out = jax.nn.sigmoid(dense(xr, p["cm_wr"]).astype(jnp.float32)) \
+        .astype(x.dtype) * dense(k, p["cm_wv"])
+    return out, x[:, -1, :]

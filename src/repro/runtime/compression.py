@@ -1,0 +1,60 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for the 1000+ node posture).
+
+``make_compressor`` returns a grad_transform for ``make_train_step``: each
+tensor is quantised to int8 with a per-tensor scale before entering the
+optimizer; the quantisation error is carried into the next step (error
+feedback), which keeps SGD/Adam convergence intact (Karimireddy et al. 2019).
+On a real mesh the int8 payload is what crosses the wire — ``int8_allreduce``
+below is the shard_map collective that performs the reduction in int8 —
+while under GSPMD auto-parallelisation we apply the numerics transform and
+let XLA keep the reduction fused.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_compressor() -> Tuple[Callable, Callable]:
+    """Returns (init_error_state, grad_transform(grads, err) ->
+    (grads', err'))."""
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+    def transform(grads, err):
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            q, s = quantize_int8(g32)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), g32 - deq
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_leaves(err)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+                jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))
+
+    return init, transform
+
+
+def int8_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """shard_map-style collective: quantise locally, all-reduce the int8
+    payload (summed in int32), dequantise with the max scale."""
+    q, scale = quantize_int8(x)
+    scale = jax.lax.pmax(scale, axis_name)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,27 @@
+"""Elastic re-meshing: reshard a checkpointed state onto a different mesh.
+
+When the device pool changes (node loss, pool grow), training resumes on a
+new (data', model') mesh: parameter PartitionSpecs are re-derived by the
+same rules and the state is re-placed with jax.device_put — the spec logic
+is mesh-shape-agnostic, so elasticity is a pure relaunch concern.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.launch.sharding import Axis, default_rules
+from repro.launch.specs import ShardingPolicy, param_pspec_tree
+
+
+def reshard_params(params: Any, new_mesh: Mesh,
+                   rules: Dict[str, Axis] = None,
+                   policy: ShardingPolicy = None) -> Any:
+    rules = rules or default_rules(multi_pod="pod" in new_mesh.shape)
+    policy = policy or ShardingPolicy(fsdp_params=True)
+    specs = param_pspec_tree(params, new_mesh, rules, policy)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        params, specs)

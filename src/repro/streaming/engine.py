@@ -1,0 +1,633 @@
+"""Tuple-at-a-time dataflow engine with a discrete-event clock.
+
+Every policy data structure (TAC/LRU/Clock caches, CMS filter, hints buffer,
+prefetch controller/manager) is the real implementation; the engine
+simulates only TIME: operator service times, network buffering (size/timeout
+flush like Flink's network stack), and state-backend latency with bounded
+I/O parallelism.  This is how the paper's latency experiments are reproduced
+deterministically on one CPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.cms import CountMinFilter
+from repro.core.policies import ClockCache, LRUCache
+from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
+                                 PrefetchingManager)
+from repro.core.tac import TimestampAwareCache
+from repro.streaming.backend import BackendModel, StateBackend
+from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
+                                    Tuple_)
+
+# calibrated engine constants (documented in DESIGN.md §8)
+NET_LATENCY = 150e-6              # per flushed buffer hop
+NET_PER_MSG = 0.1e-6
+FLUSH_OVERHEAD = 5e-6
+BUFFER_BYTES = 8 * 1024           # Flink network buffer (low-latency gear)
+BUFFER_TIMEOUT = 0.030            # 30 ms (paper §VI-e)
+IO_ISSUE = 1.5e-6
+HINT_COST = 0.5e-6                # extract + CMS update
+HINT_TIMEOUT = 0.2e-3               # hint side channel flushes aggressively:
+#                                   hints are tiny and latency-critical
+ASYNC_RESUME = 4e-6               # async I/O completion handling per tuple
+#                                   (paper §VI-A: thread/completion overheads)
+
+
+class Sim:
+    def __init__(self):
+        self.t = 0.0
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable, *args) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def after(self, delay: float, fn: Callable, *args) -> None:
+        self.at(self.t + delay, fn, *args)
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self.t = t
+            fn(*args)
+        self.t = max(self.t, t_end)
+
+
+class Channel:
+    """src_op -> dst_op edge with per-(src,dst)-subtask network buffers."""
+
+    def __init__(self, sim: Sim, dst_op: "Operator", kind: str,
+                 partition: Callable[[Any, int], int],
+                 n_src: int, timeout: float = BUFFER_TIMEOUT):
+        self.sim = sim
+        self.dst = dst_op
+        self.kind = kind                  # data | hint
+        self.partition = partition
+        self.timeout = timeout
+        self.bufs: Dict[Tuple[int, int], List] = defaultdict(list)
+        self.buf_bytes: Dict[Tuple[int, int], int] = defaultdict(int)
+        self.flush_scheduled: Dict[Tuple[int, int], bool] = defaultdict(bool)
+        self.bytes_sent = 0
+        self.msgs_sent = 0
+
+    def send(self, src_sub: int, msg: Any) -> None:
+        if isinstance(msg, (Marker, CheckpointBarrier)):
+            # control messages are broadcast and flush the buffer (order!)
+            for d in range(self.dst.parallelism):
+                self.bufs[(src_sub, d)].append(msg)
+                self._flush(src_sub, d)
+            return
+        key = getattr(msg, "key", None)
+        d = self.partition(key, self.dst.parallelism)
+        slot = (src_sub, d)
+        self.bufs[slot].append(msg)
+        self.buf_bytes[slot] += getattr(msg, "size", 64)
+        if self.buf_bytes[slot] >= BUFFER_BYTES:
+            self._flush(src_sub, d)
+        elif not self.flush_scheduled[slot]:
+            self.flush_scheduled[slot] = True
+            self.sim.after(self.timeout, self._timeout_flush, src_sub, d)
+
+    def _timeout_flush(self, s: int, d: int) -> None:
+        self.flush_scheduled[(s, d)] = False
+        if self.bufs[(s, d)]:
+            self._flush(s, d)
+
+    def _flush(self, s: int, d: int) -> None:
+        batch = self.bufs[(s, d)]
+        if not batch:
+            return
+        self.bufs[(s, d)] = []
+        nbytes = self.buf_bytes[(s, d)]
+        self.buf_bytes[(s, d)] = 0
+        self.bytes_sent += nbytes + 8 * len(batch)
+        self.msgs_sent += len(batch)
+        delay = NET_LATENCY + NET_PER_MSG * len(batch)
+        self.sim.after(delay, self.dst.deliver_batch, d, batch)
+
+
+def hash_partition(key: Any, n: int) -> int:
+    return hash(key) % n if key is not None else 0
+
+
+class Operator:
+    """Base operator: pulls one message at a time from its input queue."""
+
+    def __init__(self, engine: "Engine", name: str, parallelism: int,
+                 service_time: float = 2e-6):
+        self.engine = engine
+        self.sim = engine.sim
+        self.name = name
+        self.parallelism = parallelism
+        self.service_time = service_time
+        self.queues: List[deque] = [deque() for _ in range(parallelism)]
+        self.ready: List[deque] = [deque() for _ in range(parallelism)]
+        self.busy = [False] * parallelism
+        self.busy_time = [0.0] * parallelism
+        self.out_data: List[Channel] = []
+        self.out_hint: List[Channel] = []
+        self.plan_pos = 0
+        self.processed = 0
+        self._barrier_seen = set()
+
+    # ------------------------------------------------------------- plumbing
+    def deliver_batch(self, sub: int, batch: List[Any]) -> None:
+        self.queues[sub].extend(batch)
+        self._kick(sub)
+
+    def _kick(self, sub: int) -> None:
+        if not self.busy[sub] and (self.ready[sub] or self.queues[sub]):
+            self._start(sub)
+
+    def _start(self, sub: int) -> None:
+        if self.busy[sub]:
+            return
+        q = self.ready[sub] if self.ready[sub] else self.queues[sub]
+        if not q:
+            return
+        msg = q.popleft()
+        self.busy[sub] = True
+        svc = self.handle(sub, msg)
+        if svc is None:
+            svc = self.service_time
+        self.busy_time[sub] += svc
+        self.sim.after(svc, self._finish, sub)
+
+    def _finish(self, sub: int) -> None:
+        self.busy[sub] = False
+        self._kick(sub)
+
+    def emit(self, sub: int, msg: Any) -> None:
+        for ch in self.out_data:
+            ch.send(sub, msg)
+
+    def emit_hint(self, sub: int, msg: Any) -> None:
+        for ch in self.out_hint:
+            ch.send(sub, msg)
+
+    # ------------------------------------------------------------ behaviour
+    def handle(self, sub: int, msg: Any) -> Optional[float]:
+        if isinstance(msg, Marker):
+            self.on_marker(sub, msg)
+            return 1e-7
+        if isinstance(msg, CheckpointBarrier):
+            self.on_barrier(sub, msg)
+            return 1e-7
+        self.processed += 1
+        return self.process(sub, msg)
+
+    def on_barrier(self, sub: int, b: CheckpointBarrier) -> None:
+        # unaligned-checkpoint semantics: act on the first copy per subtask,
+        # drop duplicates arriving from other upstream subtasks
+        if (b.checkpoint_id, sub) in self._barrier_seen:
+            return
+        self._barrier_seen.add((b.checkpoint_id, sub))
+        self.emit(sub, b)
+
+    def on_marker(self, sub: int, m: Marker) -> None:
+        self.emit(sub, m)
+
+    def process(self, sub: int, tup: Tuple_) -> Optional[float]:
+        self.emit(sub, tup)
+        return self.service_time
+
+
+class MapOp(Operator):
+    """Stateless transform; optionally a lookahead (Hint Extractor inside)."""
+
+    def __init__(self, engine, name, parallelism, fn=None,
+                 service_time=2e-6, key_of: Optional[Callable] = None,
+                 cms_conf: Optional[dict] = None):
+        super().__init__(engine, name, parallelism, service_time)
+        self.fn = fn
+        self.key_of = key_of               # state-access key extractor
+        self.hint_active = False
+        self.cms = [CountMinFilter(**(cms_conf or {}))
+                    for _ in range(parallelism)] if key_of else None
+        self.hints_emitted = 0
+        self.hints_suppressed = 0
+
+    def on_marker(self, sub: int, m: Marker) -> None:
+        # side-channel copy first: the hint path must never trail the data
+        # copy of the same marker or slack would be measured against the
+        # NEXT round's marker
+        if self.key_of is not None:
+            self.emit_hint(sub, Marker(m.marker_id, lookahead_id=self.name))
+        self.emit(sub, m)
+
+    def process(self, sub: int, tup: Tuple_) -> Optional[float]:
+        out = self.fn(tup) if self.fn else tup
+        svc = self.service_time
+        if out is None:
+            return svc
+        outs = out if isinstance(out, list) else [out]
+        for o in outs:
+            if self.hint_active and self.key_of is not None:
+                k = self.key_of(o)
+                if k is not None:
+                    svc += HINT_COST
+                    if self.cms[sub].update_and_classify(k):
+                        self.hints_suppressed += 1
+                    else:
+                        self.hints_emitted += 1
+                        self.emit_hint(sub, Hint(k, o.ts,
+                                                 origin=self.name))
+            self.emit(sub, o)
+        return svc
+
+
+class SourceOp(Operator):
+    """Rate-driven source; generator yields (key, payload, size, kind)."""
+
+    def __init__(self, engine, name, parallelism, rate: float, gen,
+                 service_time=1e-6):
+        super().__init__(engine, name, parallelism, service_time)
+        self.rate = rate
+        self.gen = gen
+        self.stopped = False
+
+    def start(self) -> None:
+        per = self.rate / self.parallelism
+        for s in range(self.parallelism):
+            self.sim.after(1.0 / per * (s + 1) / self.parallelism,
+                           self._tick, s, 1.0 / per)
+
+    def _tick(self, sub: int, interval: float) -> None:
+        if self.stopped:
+            return
+        now = self.sim.t
+        rec = self.gen(now)
+        if rec is not None:
+            tup = Tuple_(ts=now, key=rec[0], payload=rec[1], size=rec[2],
+                         ingest_t=now)
+            self.processed += 1
+            self.busy_time[sub] += self.service_time
+            self.emit(sub, tup)
+        self.sim.after(interval, self._tick, sub, interval)
+
+
+@dataclass
+class _IOReq:
+    kind: str            # read | prefetch | write
+    key: Any
+    hint_ts: float = 0.0
+    entry: Any = None    # for writes
+    origin: str = ""     # lookahead that triggered a prefetch
+
+
+class StatefulOp(Operator):
+    """Keyed stateful operator with pluggable cache policy and access mode.
+
+    modes: 'sync' (cache miss blocks), 'async' (miss parks the tuple, CPU
+    moves on), 'prefetch' (async + Keyed Prefetching hints feed the TAC).
+    """
+
+    def __init__(self, engine, name, parallelism, apply_fn,
+                 backend_model: BackendModel, cache_capacity: int,
+                 policy: str = "lru", mode: str = "sync",
+                 io_workers: int = 4, state_size: int = 200,
+                 service_time: float = 3e-6, read_only: bool = False,
+                 default_state=None, gamma: float = 0.003,
+                 dense_backend: bool = False):
+        super().__init__(engine, name, parallelism, service_time)
+        self.apply_fn = apply_fn           # (tup, state) -> (state', outputs)
+        self.mode = mode
+        self.state_size = state_size
+        self.read_only = read_only
+        self.caches = []
+        self.backends = []
+        self.managers: List[PrefetchingManager] = []
+        for s in range(parallelism):
+            if policy == "tac":
+                c = TimestampAwareCache(cache_capacity)
+            elif policy == "clock":
+                c = ClockCache(cache_capacity)
+            else:
+                c = LRUCache(cache_capacity)
+            self.caches.append(c)
+            self.backends.append(StateBackend(
+                backend_model, default_factory=default_state,
+                assume_present=dense_backend))
+            self.managers.append(PrefetchingManager(
+                name, s, engine.controller, gamma=gamma,
+                shared=self.managers[0] if self.managers else None))
+        self.io_free = [io_workers] * parallelism
+        self.io_q: List[deque] = [deque() for _ in range(parallelism)]
+        self.waiting: List[Dict[Any, List[Tuple_]]] = \
+            [defaultdict(list) for _ in range(parallelism)]
+        self.in_flight: List[set] = [set() for _ in range(parallelism)]
+        self.io_workers = io_workers
+        self.blocked_time = [0.0] * parallelism
+        self.outputs = 0
+        self.miss_reported = [False] * parallelism
+
+    # ------------------------------------------------------------- messages
+    def handle(self, sub: int, msg: Any) -> Optional[float]:
+        if isinstance(msg, Marker):
+            if msg.lookahead_id is not None:      # via hint channel
+                self.managers[sub].on_marker_hint(msg.marker_id,
+                                                  msg.lookahead_id,
+                                                  self.sim.t)
+            else:
+                self.managers[sub].on_marker_data(msg.marker_id, self.sim.t)
+                self.emit(sub, msg)
+            return 1e-7
+        if isinstance(msg, CheckpointBarrier):
+            if (msg.checkpoint_id, sub) in self._barrier_seen:
+                return 1e-7
+            self._barrier_seen.add((msg.checkpoint_id, sub))
+            # paper §IV-E: all modified state in the TAC — resident or staged
+            # in the eviction buffer — is persisted before the checkpoint
+            # completes; the write batch runs at backend speed but off the
+            # tuple path (modelled as one bulk write here)
+            dirty = self.caches[sub].flush_dirty()
+            for e in dirty:
+                self.backends[sub].write(e.key, e.state, self.state_size)
+            self.engine.ack_barrier(b_id=msg.checkpoint_id,
+                                    op=self.name, sub=sub,
+                                    n_flushed=len(dirty))
+            self.emit(sub, msg)
+            return 1e-6 * max(1, len(dirty))
+        if isinstance(msg, Hint):
+            return self._on_hint(sub, msg)
+        self.processed += 1
+        return self._on_data(sub, msg)
+
+    def _on_hint(self, sub: int, h: Hint) -> float:
+        mgr = self.managers[sub]
+        if mgr.on_hint(h.key, h.ts, self.caches[sub]):
+            mgr.hints.take(h.key)         # unprocessed -> in-flight
+            self._io_enqueue(sub, _IOReq("prefetch", h.key, h.ts,
+                                         origin=h.origin))
+        return 0.4e-6       # hash probe + buffer insert, no deserialization
+
+    def _on_data(self, sub: int, tup: Tuple_) -> float:
+        cache = self.caches[sub]
+        state = cache.lookup(tup.key, tup.ts)
+        if state is not None:
+            if self.mode == "prefetch":
+                self.managers[sub].prefetch_hits += 1
+            return self._apply(sub, tup, state)
+        # miss
+        if self.mode == "prefetch" and not self.managers[sub].enabled:
+            la = self.managers[sub].on_cache_misses(self.sim.t)
+            if la is not None:
+                self.engine.set_lookahead(self.name, la)
+        if self.mode == "sync":
+            state, lat = self.backends[sub].fetch(tup.key, self.state_size)
+            cache.insert(tup.key, state, tup.ts, size=self.state_size)
+            self.managers[sub].record_access_latency(lat)
+            self.blocked_time[sub] += lat
+            return lat + self._apply(sub, tup, state)
+        # async / prefetch: park the tuple, fetch if not already in flight
+        self.waiting[sub][tup.key].append(tup)
+        if tup.key not in self.in_flight[sub]:
+            self._io_enqueue(sub, _IOReq("read", tup.key, tup.ts),
+                             front=True)
+        # completed-fetch scanning cost grows with outstanding async ops
+        return IO_ISSUE * (1.0 + len(self.in_flight[sub]) / 32.0)
+
+    # ------------------------------------------------------------------- IO
+    def _io_enqueue(self, sub: int, req: _IOReq, front: bool = False) -> None:
+        if req.kind in ("read", "prefetch"):
+            if req.key in self.in_flight[sub]:
+                return
+            self.in_flight[sub].add(req.key)
+        if front:
+            self.io_q[sub].appendleft(req)
+        else:
+            self.io_q[sub].append(req)
+        self._io_kick(sub)
+
+    def _io_kick(self, sub: int) -> None:
+        cache = self.caches[sub]
+        while self.io_free[sub] > 0:
+            if self.io_q[sub]:
+                req = self.io_q[sub].popleft()
+            else:
+                wb = cache.pop_writeback()
+                if wb is None:
+                    return
+                req = _IOReq("write", wb.key, entry=wb)
+            self.io_free[sub] -= 1
+            if req.kind == "write":
+                lat = self.backends[sub].latency(self.state_size)
+            else:
+                _, lat = self.backends[sub].peek_latency(req.key,
+                                                         self.state_size)
+            self.sim.after(lat, self._io_done, sub, req, lat)
+
+    def _io_done(self, sub: int, req: _IOReq, lat: float) -> None:
+        self.io_free[sub] += 1
+        cache = self.caches[sub]
+        mgr = self.managers[sub]
+        if req.kind == "write":
+            self.backends[sub].write(req.key, req.entry.state,
+                                     self.state_size)
+        else:
+            state, _ = self.backends[sub].fetch(req.key, self.state_size)
+            hint_ts = mgr.hints.complete(req.key)
+            mgr.hints.discard(req.key)    # clear any stale unprocessed entry
+            self.in_flight[sub].discard(req.key)
+            prefetched = req.kind == "prefetch"
+            ts = hint_ts if hint_ts is not None else req.hint_ts
+            cache.insert(req.key, state, ts, size=self.state_size,
+                         prefetched=prefetched and req.key not in
+                         self.waiting[sub], origin=req.origin)
+            if req.kind == "read" or req.key in self.waiting[sub]:
+                mgr.record_access_latency(lat)
+            # wake parked tuples
+            parked = self.waiting[sub].pop(req.key, None)
+            if parked:
+                self.ready[sub].extend(parked)
+                self._kick(sub)
+        self._io_kick(sub)
+
+    # ------------------------------------------------------------ computing
+    def _apply(self, sub: int, tup: Tuple_, state: Any) -> float:
+        new_state, outputs = self.apply_fn(tup, state)
+        if not self.read_only and new_state is not state:
+            self.caches[sub].write(tup.key, new_state, tup.ts,
+                                   size=self.state_size)
+            self._io_kick(sub)             # opportunistic write-back
+        for o in outputs:
+            self.outputs += 1
+            self.emit(sub, o)
+        return self.service_time
+
+    def handle_parked(self, sub: int, tup: Tuple_) -> float:
+        state = self.caches[sub].lookup(tup.key, tup.ts)
+        if state is None:                   # evicted before processing
+            state = self.backends[sub].read(tup.key, self.state_size)
+            self.caches[sub].insert(tup.key, state, tup.ts,
+                                    size=self.state_size)
+        return ASYNC_RESUME + self._apply(sub, tup, state)
+
+    def _start(self, sub: int) -> None:
+        # parked tuples resume through the ready queue with full processing
+        if self.busy[sub]:
+            return
+        if self.ready[sub]:
+            tup = self.ready[sub].popleft()
+            self.busy[sub] = True
+            svc = self.handle_parked(sub, tup)
+            self.busy_time[sub] += svc
+            self.sim.after(svc, self._finish, sub)
+            return
+        super()._start(sub)
+
+    def periodic_evaluate(self) -> None:
+        mgr = self.managers[0]
+        if not any(m.enabled for m in self.managers):
+            return
+        mgr.enabled = True
+        new = mgr.evaluate(self.caches, self.sim.t)
+        if new is not None:
+            self.engine.set_lookahead(self.name, new)
+
+
+class SinkOp(Operator):
+    def process(self, sub: int, tup: Tuple_) -> Optional[float]:
+        self.engine.record_latency(self.sim.t, tup)
+        return 1e-6
+
+
+class Engine:
+    def __init__(self, marker_interval: float = 0.100):
+        self.sim = Sim()
+        self.controller = PrefetchingController(marker_interval)
+        self.operators: Dict[str, Operator] = {}
+        self._candidate_ops: Dict[str, List[str]] = {}
+        self.order: List[str] = []
+        self.latencies: List[float] = []
+        self.latency_cap = 2_000_000
+        self._marker_ids = itertools.count()
+        self.marker_interval = marker_interval
+        self.lookahead_timeline: List[Tuple[float, str]] = []
+        self.checkpoint_acks: Dict[int, List] = {}
+
+    # -------------------------------------------------------------- building
+    def add(self, op: Operator) -> Operator:
+        op.plan_pos = len(self.order)
+        self.operators[op.name] = op
+        self.order.append(op.name)
+        return op
+
+    def connect(self, src: Operator, dst: Operator,
+                partition=hash_partition, kind: str = "data",
+                timeout: float = BUFFER_TIMEOUT) -> None:
+        ch = Channel(self.sim, dst, kind, partition, src.parallelism,
+                     timeout)
+        if kind == "hint":
+            src.out_hint.append(ch)
+        else:
+            src.out_data.append(ch)
+
+    def register_prefetching(self, stateful: StatefulOp,
+                             lookaheads: List[MapOp]) -> None:
+        """Declare candidate lookaheads (ordered source -> closest) and wire
+        the hint side channels."""
+        cands = [LookaheadCandidate(op.name, op.plan_pos)
+                 for op in lookaheads]
+        self.controller.register(stateful.name, cands)
+        self._candidate_ops[stateful.name] = [op.name for op in lookaheads]
+        for op in lookaheads:
+            self.connect(op, stateful, kind="hint", timeout=HINT_TIMEOUT)
+
+    def set_lookahead(self, stateful_name: str, lookahead_name: str) -> None:
+        for name in self._candidate_ops.get(stateful_name, []):
+            op = self.operators.get(name)
+            if isinstance(op, MapOp):
+                want = name == lookahead_name
+                if op.hint_active != want:
+                    op.hint_active = want
+        if (not self.lookahead_timeline
+                or self.lookahead_timeline[-1][1] != lookahead_name):
+            self.lookahead_timeline.append((self.sim.t, lookahead_name))
+
+    # -------------------------------------------------------------- running
+    def record_latency(self, now: float, tup: Tuple_) -> None:
+        if len(self.latencies) < self.latency_cap:
+            self.latencies.append(now - tup.ingest_t)
+
+    def trigger_checkpoint(self, checkpoint_id: int) -> None:
+        b = CheckpointBarrier(checkpoint_id)
+        for name in self.order:
+            op = self.operators[name]
+            if isinstance(op, SourceOp):
+                for ch in op.out_data:
+                    ch.send(0, b)
+
+    def ack_barrier(self, b_id: int, op: str, sub: int,
+                    n_flushed: int) -> None:
+        self.checkpoint_acks.setdefault(b_id, []).append(
+            (self.sim.t, op, sub, n_flushed))
+
+    def _inject_marker(self) -> None:
+        mid = next(self._marker_ids)
+        m = Marker(mid)
+        for name in self.order:
+            op = self.operators[name]
+            if isinstance(op, SourceOp):
+                for ch in op.out_data:
+                    ch.send(0, m)
+        for name in self.order:
+            op = self.operators[name]
+            if isinstance(op, StatefulOp):
+                op.periodic_evaluate()
+        self.sim.after(self.marker_interval, self._inject_marker)
+
+    def run(self, duration: float, warmup: float = 0.0) -> Dict[str, Any]:
+        for op in self.operators.values():
+            if isinstance(op, SourceOp):
+                op.start()
+        self.sim.after(self.marker_interval, self._inject_marker)
+        if warmup > 0:
+            self.sim.run_until(warmup)
+            self.latencies.clear()
+        self.sim.run_until(warmup + duration)
+        return self.metrics(duration, warmup)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self, duration: float, warmup: float) -> Dict[str, Any]:
+        import numpy as np
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        out = {
+            "n_outputs": len(self.latencies),
+            "throughput": len(self.latencies) / duration,
+            "p50": float(np.percentile(lat, 50)),
+            "p90": float(np.percentile(lat, 90)),
+            "p99": float(np.percentile(lat, 99)),
+            "p999": float(np.percentile(lat, 99.9)),
+            "max": float(lat.max()),
+        }
+        busy = sum(sum(op.busy_time) for op in self.operators.values())
+        slots = sum(op.parallelism for op in self.operators.values())
+        out["cpu_util"] = busy / (slots * (duration + warmup))
+        # per-operator busy fraction (Flink busyTimeMsPerSecond analogue:
+        # includes synchronous I/O wait, paper Table I)
+        for name, op in self.operators.items():
+            out[f"util_{name}"] = (sum(op.busy_time)
+                                   / (op.parallelism * (duration + warmup)))
+        data_bytes = hint_bytes = 0
+        for op in self.operators.values():
+            for ch in op.out_data:
+                data_bytes += ch.bytes_sent
+            for ch in op.out_hint:
+                hint_bytes += ch.bytes_sent
+        out["data_bytes"] = data_bytes
+        out["hint_bytes"] = hint_bytes
+        out["net_overhead"] = hint_bytes / max(1, data_bytes)
+        for name, op in self.operators.items():
+            if isinstance(op, StatefulOp):
+                cache = op.caches[0]
+                out[f"{name}_hit_rate"] = sum(
+                    c.hits for c in op.caches) / max(
+                    1, sum(c.hits + c.misses for c in op.caches))
+                out[f"{name}_queued"] = sum(len(q) for q in op.queues)
+        return out

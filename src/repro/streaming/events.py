@@ -1,0 +1,42 @@
+"""Message types flowing through the dataflow engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass
+class Tuple_:
+    ts: float                 # event time (set at the source)
+    key: Any                  # partitioning / state-access key (may be None)
+    payload: Any = None
+    size: int = 200           # serialized bytes (network accounting)
+    ingest_t: float = 0.0     # processing time entering the pipeline
+
+
+@dataclass
+class Hint:
+    key: Any
+    ts: float                 # event time at which the key will be accessed
+    origin: str = ""          # lookahead operator that emitted the hint
+    size: int = 24            # key + timestamp on the wire
+
+
+@dataclass
+class Marker:
+    marker_id: int
+    origin: str = "controller"
+    lookahead_id: Optional[str] = None
+    size: int = 16
+
+
+@dataclass
+class Watermark:
+    ts: float
+    size: int = 16
+
+
+@dataclass
+class CheckpointBarrier:
+    checkpoint_id: int
+    size: int = 16

