@@ -5,8 +5,13 @@ The accelerator twin of ``repro.core.tac``: state rows live in
 key's bucket (set-associative; with n_buckets=1 it is exactly the paper's
 fully-associative min-ts policy — the equivalence test in
 tests/test_tac_jax.py checks eviction-order agreement with the Python TAC).
-Lookups go through the ``tac_probe`` Pallas kernel; admissions are a scan
-(duplicate keys in one batch must see each other's effects).
+Lookups go through the ``tac_probe`` Pallas kernel.  Admissions come in two
+flavours: ``admit`` scans the batch sequentially (reference semantics:
+duplicate keys in one batch must see each other's effects), and
+``admit_batch`` vectorizes — keys in distinct buckets land in ONE fused
+update, same-bucket collisions resolve in batch order over conflict rounds,
+and the chosen slot + displaced key/dirty bit are reported per key (the
+serving arena's write-back path needs them).
 """
 from __future__ import annotations
 
@@ -85,3 +90,103 @@ def admit(state: TACState, keys: jax.Array, ts: jax.Array,
 
     state, _ = jax.lax.scan(one, state, (keys, ts, vals, dirty))
     return state
+
+
+class AdmitResult(NamedTuple):
+    state: TACState
+    slots: jax.Array          # [B] int32 flat slot (bucket * ways + way)
+    evicted_keys: jax.Array   # [B] int32 displaced key, -1 = none/overwrite
+    evicted_dirty: jax.Array  # [B] bool  dirty bit of the displaced key
+
+
+@jax.jit
+def admit_batch(state: TACState, keys: jax.Array, ts: jax.Array,
+                vals: jax.Array = None, dirty: jax.Array = None
+                ) -> AdmitResult:
+    """Vectorized multi-key admit.
+
+    Keys hashing to DISTINCT buckets are admitted in one fused update (no
+    ``lax.scan`` over the batch); keys colliding in a bucket are resolved in
+    batch order over conflict rounds (``lax.while_loop``, trip count = max
+    same-bucket multiplicity, 1 for collision-free batches).  Semantics are
+    exactly sequential ``admit``: overwrite a matching key, else evict the
+    bucket's min-ts way.
+
+    Returns the new state plus, per admitted key, the flat slot it landed in
+    and the key/dirty-bit it displaced (-1/False when the way was empty or
+    held the same key) — callers owning slot-addressed payloads (the paged
+    arena) use these to write dirty victims back before re-staging.
+    """
+    B = keys.shape[0]
+    n_buckets, ways = state.keys.shape
+    if vals is None:
+        vals = jnp.zeros((B, state.vals.shape[-1]), state.vals.dtype)
+    if dirty is None:
+        dirty = jnp.zeros((B,), bool)
+    b = bucket_of(keys, n_buckets)
+    # occurrence rank within each bucket, in batch order
+    same_before = (b[:, None] == b[None, :]) & \
+        jnp.tril(jnp.ones((B, B), bool), k=-1)
+    rank = same_before.sum(axis=1).astype(jnp.int32)
+    n_rounds = rank.max() + 1
+
+    def round_body(carry):
+        r, st, slots, ev_k, ev_d = carry
+        active = rank == r
+        bkeys = st.keys[b]                               # [B, ways]
+        bts = st.ts[b]
+        match = bkeys == keys[:, None]
+        hit = match.any(axis=1)
+        way = jnp.where(hit, jnp.argmax(match, axis=1),
+                        jnp.argmin(bts, axis=1)).astype(jnp.int32)
+        old_key = jnp.take_along_axis(bkeys, way[:, None], 1)[:, 0]
+        old_dirty = st.dirty[b, way]
+        # masked scatter: active lanes have unique buckets this round, so a
+        # one-hot add is an exact set and duplicate-index order never matters
+        act_i = active.astype(jnp.int32)
+        cnt = jnp.zeros((n_buckets, ways), jnp.int32).at[b, way].add(act_i)
+        mask = cnt > 0
+        grid_k = jnp.zeros((n_buckets, ways), jnp.int32) \
+            .at[b, way].add(jnp.where(active, keys, 0))
+        grid_t = jnp.zeros((n_buckets, ways), jnp.float32) \
+            .at[b, way].add(jnp.where(active, ts, 0.0))
+        grid_d = jnp.zeros((n_buckets, ways), jnp.int32) \
+            .at[b, way].add(jnp.where(active, dirty.astype(jnp.int32), 0))
+        grid_v = jnp.zeros_like(st.vals).at[b, way].add(
+            jnp.where(active[:, None], vals.astype(st.vals.dtype), 0))
+        st = TACState(
+            keys=jnp.where(mask, grid_k, st.keys),
+            ts=jnp.where(mask, grid_t, st.ts),
+            vals=jnp.where(mask[..., None], grid_v, st.vals),
+            dirty=jnp.where(mask, grid_d > 0, st.dirty))
+        slots = jnp.where(active, b * ways + way, slots)
+        displaced = active & ~hit & (old_key >= 0)
+        ev_k = jnp.where(displaced, old_key, ev_k)
+        ev_d = jnp.where(displaced, old_dirty, ev_d)
+        return r + 1, st, slots, ev_k, ev_d
+
+    init = (jnp.int32(0), state, jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), -1, jnp.int32), jnp.zeros((B,), bool))
+    _, state, slots, ev_k, ev_d = jax.lax.while_loop(
+        lambda c: c[0] < n_rounds, round_body, init)
+    return AdmitResult(state, slots, ev_k, ev_d)
+
+
+def set_dirty(state: TACState, keys: jax.Array,
+              value: bool = True) -> TACState:
+    """Flip the dirty bit of resident keys (no-op for missing keys).
+
+    Miss lanes alias way 0 of their bucket, so the scatter must be
+    idempotent under duplicate indices: ``.at[].set`` with a stale value
+    could clobber a hit lane's update (unspecified duplicate order) —
+    ``.at[].max``/``.at[].min`` with a neutral element cannot."""
+    _, hit, way = tac_probe(keys, state.keys, state.vals, interpret=True)
+    hit = hit.astype(bool)
+    b = bucket_of(keys, state.keys.shape[0])
+    safe = jnp.maximum(way, 0)
+    d_int = state.dirty.astype(jnp.int32)
+    if value:
+        d_int = d_int.at[b, safe].max(jnp.where(hit, 1, 0))
+    else:
+        d_int = d_int.at[b, safe].min(jnp.where(hit, 0, 1))
+    return state._replace(dirty=d_int > 0)

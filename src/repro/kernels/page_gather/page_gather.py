@@ -1,0 +1,73 @@
+"""Batched page gather/scatter between logical order and physical slots.
+
+The serving arena keeps K/V (or raveled session-state) pages in fixed
+physical slots chosen by the device TAC.  Staging N prefetched pages in, or
+pulling N eviction victims out for write-back, is one kernel launch each:
+the slot ids ride in scalar-prefetch memory and every grid step's BlockSpec
+index_map dereferences them, so the copy engine walks the slots without any
+per-page Python loop (the same indirection idiom as ``decode_attention``).
+
+Scatter aliases the pool input to its output: untouched slots keep their
+bytes, touched slots are overwritten in place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(slots_ref, pages_ref, out_ref):
+    del slots_ref                      # consumed by the index_map
+    out_ref[0] = pages_ref[0]
+
+
+def page_gather_kernel(slots: jax.Array, pages: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """slots [N] int32; pages [n_slots, page, d].  Returns [N, page, d]."""
+    N = slots.shape[0]
+    _, page, d = pages.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, page, d), lambda i, s: (s[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, page, d), lambda i, s: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, page, d), pages.dtype),
+        interpret=interpret,
+    )(slots, pages)
+
+
+def _scatter_kernel(slots_ref, blocks_ref, pages_ref, out_ref):
+    del slots_ref, pages_ref           # pool arrives via the output alias
+    out_ref[0] = blocks_ref[0]
+
+
+def page_scatter_kernel(slots: jax.Array, blocks: jax.Array,
+                        pages: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    """slots [N] int32; blocks [N, page, d]; pages [n_slots, page, d].
+    Returns the pool with ``pages[slots[i]] = blocks[i]`` (last write wins
+    on duplicate slots, matching grid order)."""
+    N = slots.shape[0]
+    n_slots, page, d = pages.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, page, d), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, page, d), lambda i, s: (s[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, d), lambda i, s: (s[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slots, page, d), pages.dtype),
+        input_output_aliases={2: 0},   # pool (post-prefetch input 1) -> out
+        interpret=interpret,
+    )(slots, blocks, pages)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for the page gather/scatter kernels."""
+import jax.numpy as jnp
+
+
+def page_gather_ref(slots, pages):
+    return pages[slots]
+
+
+def page_scatter_ref(slots, blocks, pages):
+    # .at[].set with duplicate indices is unspecified; enforce last-write-
+    # wins explicitly to match the kernel's grid order
+    out = pages
+    for i in range(slots.shape[0]):
+        out = out.at[slots[i]].set(blocks[i])
+    return out

@@ -1,33 +1,42 @@
-"""Serving driver: batched multi-turn LM serving with Keyed Prefetching of
-session state (the paper's technique adapted to the TPU serving stack,
-DESIGN.md §2).
+"""Serving driver: continuous-batching LM serving over the paged
+session-state subsystem (``repro.serving``, DESIGN.md §2/§6).
 
-Sessions' KV caches live in a slow SESSION STORE (disaggregated, modelled
-latency).  Requests queue at the worker; the INGEST stage (the lookahead
-operator) sees each request's session key the moment it is enqueued and
-hints the prefetcher, which stages the session state into the device-side
-cache (Timestamp-Aware policy) while the request waits — so when the worker
-picks it up, decode starts immediately.  The baseline stages on demand
-(state I/O on the critical path).
+Sessions' KV caches are RAVELED INTO FIXED-SIZE PAGES and persisted in the
+tiered session store; the device-resident arena (TAC page table + physical
+page pool) holds the working set.  The scheduler's ingest stage sees each
+request's session key at enqueue time — the paper's upstream-lookahead role
+— and in ``prefetch`` mode hints the store, which stages the session's
+pages toward the arena while the request queues.  The ``sync`` baseline
+stages on demand (state I/O on the critical path); ``async`` overlaps I/O
+but has no lookahead window.
+
+Decode compute is REAL (jitted smoke model); store I/O is modelled by the
+calibrated backend latencies on a virtual clock that the measured compute
+also advances — so TTFT/TPOT mix real compute with modelled staging, and a
+full sweep runs in seconds (pass ``--wall-clock`` for live timing).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 48
 """
 from __future__ import annotations
 
 import argparse
-import threading
+import math
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.tac import TimestampAwareCache
 from repro.models.lm import build_model
+from repro.serving import (ContinuousBatchingScheduler, PagedStateArena,
+                           Request, ServingMetrics, SimClock, TieredStore,
+                           WallClock)
+from repro.streaming.backend import BackendModel
+
+PAGE_KEY_STRIDE = 4096     # page key = sid * stride + page_idx + 1
 
 
 @dataclass
@@ -37,158 +46,187 @@ class ServeConfig:
     n_requests: int = 48
     prompt_len: int = 32
     decode_tokens: int = 4
-    store_latency: float = 0.050      # session restore from remote store
-    cache_sessions: int = 8           # device cache capacity (sessions)
-    arrival_gap: float = 0.010
+    cache_sessions: int = 8            # arena capacity (sessions)
+    page_elems: int = 8192             # fp32 elements per state page
+    arrival_rate: float = 400.0        # offered load, requests/s
+    max_batch: int = 4
+    store_latency: float = 0.012       # backing-tier base latency (s)
+    store_bandwidth: float = 1.2e9
+    wall_clock: bool = False
 
 
-class SessionStore:
-    """Disaggregated session-state store with modelled restore latency."""
+class StatePager:
+    """Ravel the float leaves of a KV-cache pytree into fixed-size pages
+    (and back).  Non-float leaves (decode position) ride as aux state."""
 
-    def __init__(self, latency: float):
-        self.data: Dict[int, Any] = {}
-        self.latency = latency
-        self.reads = 0
+    def __init__(self, example: Any, page_elems: int):
+        leaves, self.treedef = jax.tree.flatten(example)
+        self.is_float = [jnp.issubdtype(l.dtype, jnp.floating)
+                         for l in leaves]
+        self.shapes = [l.shape for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.sizes = [int(np.prod(s)) if f else 0
+                      for s, f in zip(self.shapes, self.is_float)]
+        self.total = sum(self.sizes)
+        self.page_elems = page_elems
+        self.n_pages = max(1, math.ceil(self.total / page_elems))
 
-    def load(self, sid: int):
-        time.sleep(self.latency)
-        self.reads += 1
-        return self.data.get(sid)
+    def to_pages(self, kv: Any) -> Tuple[jax.Array, List[jax.Array]]:
+        leaves = jax.tree.leaves(kv)
+        flat = jnp.concatenate(
+            [l.astype(jnp.float32).ravel()
+             for l, f in zip(leaves, self.is_float) if f])
+        flat = jnp.pad(flat, (0, self.n_pages * self.page_elems - self.total))
+        pages = flat.reshape(self.n_pages, self.page_elems, 1)
+        aux = [l for l, f in zip(leaves, self.is_float) if not f]
+        return pages, aux
 
-    def store(self, sid: int, state) -> None:
-        self.data[sid] = state
-
-
-class Prefetcher:
-    """State thread pool: drains the hint queue with N workers, staging
-    sessions into the TAC (the paper's asynchronous State Thread Pool)."""
-
-    def __init__(self, store: SessionStore, cache: TimestampAwareCache,
-                 workers: int = 4):
-        self.store = store
-        self.cache = cache
-        self.hints = deque()
-        self.lock = threading.Lock()
-        self.in_flight = set()
-        self.stop_flag = False
-        self.prefetched = 0
-        self.threads = [threading.Thread(target=self._run, daemon=True)
-                        for _ in range(workers)]
-
-    def start(self) -> None:
-        for t in self.threads:
-            t.start()
-
-    def hint(self, sid: int, ts: float) -> None:
-        with self.lock:
-            self.hints.append((sid, ts))
-
-    def _run(self) -> None:
-        while not self.stop_flag:
-            with self.lock:
-                item = self.hints.popleft() if self.hints else None
-                if item is not None:
-                    sid, ts = item
-                    if sid in self.in_flight:
-                        item = None
-                    else:
-                        self.in_flight.add(sid)
-            if item is None:
-                time.sleep(0.0005)
-                continue
-            sid, ts = item
-            if self.cache.contains(sid):
-                self.cache.renew(sid, ts)
-                with self.lock:
-                    self.in_flight.discard(sid)
-                continue
-            state = self.store.load(sid)
-            with self.lock:
-                if state is not None:
-                    self.cache.insert(sid, state, ts, prefetched=True)
-                    self.prefetched += 1
-                self.in_flight.discard(sid)
+    def from_pages(self, pages: jax.Array, aux: List[jax.Array]) -> Any:
+        flat = pages.reshape(-1)[:self.total]
+        leaves, off, ai = [], 0, 0
+        for f, shape, dtype, size in zip(self.is_float, self.shapes,
+                                         self.dtypes, self.sizes):
+            if f:
+                leaves.append(flat[off:off + size].reshape(shape)
+                              .astype(dtype))
+                off += size
+            else:
+                leaves.append(aux[ai])
+                ai += 1
+        return jax.tree.unflatten(self.treedef, leaves)
 
 
-def run_serving(cfg: ServeConfig, prefetch: bool, seed: int = 0
+def page_keys(sid: int, n_pages: int) -> np.ndarray:
+    assert n_pages < PAGE_KEY_STRIDE
+    return np.asarray([sid * PAGE_KEY_STRIDE + p + 1
+                       for p in range(n_pages)], np.int32)
+
+
+def _grow_kv(kv: Any, prompt_len: int, T: int) -> Any:
+    """Pad the KV time axis (== prompt_len) up to T decode slots."""
+    def grow(a):
+        if hasattr(a, "ndim") and a.ndim >= 3 and a.dtype != jnp.int32:
+            for ax in range(a.ndim):
+                if a.shape[ax] == prompt_len:
+                    pw = [(0, 0)] * a.ndim
+                    pw[ax] = (0, T - prompt_len)
+                    return jnp.pad(a, pw)
+        return a
+    return jax.tree.map(grow, kv)
+
+
+def run_serving(cfg: ServeConfig, mode: str, seed: int = 0
                 ) -> Dict[str, float]:
+    """Serve ``n_requests`` multi-turn requests in the given mode and return
+    the metrics summary.  The arrival schedule is derived from (seed,
+    arrival_rate) only, so different modes face EQUAL offered load."""
     scfg = get_smoke_config(cfg.arch)
     model = build_model(scfg)
     params = model.init_params(jax.random.PRNGKey(seed))
     prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode)
     rng = np.random.RandomState(seed)
 
-    store = SessionStore(cfg.store_latency)
-    cache = TimestampAwareCache(capacity=cfg.cache_sessions)
-    pf = Prefetcher(store, cache)
-    if prefetch:
-        pf.start()
-
-    # seed sessions: each has a history KV cache persisted in the store
     T = cfg.prompt_len + cfg.decode_tokens + 8
+
+    # ---- session histories -> pages in the backing tier
+    toks = jnp.asarray(rng.randint(0, scfg.vocab_size,
+                                   (1, cfg.prompt_len)), jnp.int32)
+    _, kv0 = prefill(params, {"tokens": toks})
+    kv0 = _grow_kv(kv0, cfg.prompt_len, T)
+    pager = StatePager(kv0, cfg.page_elems)
+
+    backing = BackendModel("session-store", cfg.store_latency,
+                           cfg.store_bandwidth, parallelism=32)
+    store = TieredStore(backing_model=backing,
+                        page_bytes=cfg.page_elems * 4, workers=8)
+    session_aux: Dict[int, List[jax.Array]] = {}
     for sid in range(cfg.n_sessions):
         toks = jnp.asarray(rng.randint(0, scfg.vocab_size,
                                        (1, cfg.prompt_len)), jnp.int32)
         _, kv = prefill(params, {"tokens": toks})
+        pages, aux = pager.to_pages(_grow_kv(kv, cfg.prompt_len, T))
+        session_aux[sid] = aux
+        for p, key in enumerate(page_keys(sid, pager.n_pages)):
+            store.seed(int(key), {"state": pages[p]})
 
-        def grow(a):
-            # pad the KV time axis (== prompt_len) up to T decode slots
-            if hasattr(a, "ndim") and a.ndim >= 3 and a.dtype != jnp.int32:
-                for ax in range(a.ndim):
-                    if a.shape[ax] == cfg.prompt_len:
-                        pw = [(0, 0)] * a.ndim
-                        pw[ax] = (0, T - cfg.prompt_len)
-                        return jnp.pad(a, pw)
-            return a
+    # ---- arena sized for cache_sessions resident sessions
+    ways = 4
+    n_buckets = max(1, math.ceil(cfg.cache_sessions * pager.n_pages / ways))
+    arena = PagedStateArena(n_buckets, ways,
+                            {"state": ((cfg.page_elems, 1), jnp.float32)})
 
-        store.store(sid, jax.tree.map(grow, kv))
+    clock = WallClock() if cfg.wall_clock else SimClock()
+    sched = ContinuousBatchingScheduler(arena, store, mode=mode,
+                                        max_batch=cfg.max_batch, clock=clock,
+                                        metrics=ServingMetrics())
 
-    # warm the jitted decode path (compile outside the measurement)
-    warm_kv = store.data[0]
-    decode(params, warm_kv,
-           {"tokens": jnp.asarray([[1]], jnp.int32),
-            "pos": jnp.int32(cfg.prompt_len)})[0].block_until_ready()
+    # ---- one fused device step: pages -> KV -> decode -> pages
+    def _step(params, pages, aux, tok, pos):
+        kv = pager.from_pages(pages, aux)
+        kv["pos"] = pos
+        logits, kv2 = model.decode(params, kv, {"tokens": tok, "pos": pos})
+        pages2, aux2 = pager.to_pages(kv2)
+        return logits, pages2, aux2
 
-    # request stream
-    requests = [(i, int(rng.randint(0, cfg.n_sessions)))
-                for i in range(cfg.n_requests)]
-    queue: deque = deque()
-    ttfts: List[float] = []
-    t_arrive: Dict[int, float] = {}
+    step = jax.jit(_step)
+    # compile outside the measurement
+    warm_pages, warm_aux = pager.to_pages(kv0)
+    step(params, warm_pages, warm_aux,
+         jnp.asarray([[1]], jnp.int32),
+         jnp.int32(cfg.prompt_len))[0].block_until_ready()
 
-    def worker_step():
-        rid, sid = queue.popleft()
-        kv = cache.lookup(sid, time.time())
-        if kv is None:                      # demand staging (critical path)
-            kv = store.load(sid)
-            cache.insert(sid, kv, time.time())
-        pos = jnp.int32(cfg.prompt_len)
-        tok = jnp.asarray([[1]], jnp.int32)
-        logits, kv = decode(params, kv, {"tokens": tok, "pos": pos})
-        logits.block_until_ready()
-        ttfts.append(time.time() - t_arrive[rid])
-        cache.write(sid, kv, time.time())
+    # ---- request stream (equal offered load across modes)
+    arrivals = np.cumsum(rng.exponential(1.0 / cfg.arrival_rate,
+                                         cfg.n_requests))
+    sessions = rng.randint(0, cfg.n_sessions, cfg.n_requests)
+    t0 = clock.now()
+    pending: List[Request] = [
+        Request(rid=i, session=int(sessions[i]),
+                page_keys=page_keys(int(sessions[i]), pager.n_pages),
+                n_tokens=cfg.decode_tokens,
+                meta={"pos": cfg.prompt_len})
+        for i in range(cfg.n_requests)]
 
-    for rid, sid in requests:
-        t_arrive[rid] = time.time()
-        queue.append((rid, sid))
-        if prefetch:                        # ingest = lookahead operator
-            pf.hint(sid, time.time() + 1.0)
-        time.sleep(cfg.arrival_gap)
-        while len(queue) > 2:               # worker drains under backlog
-            worker_step()
-    while queue:
-        worker_step()
+    i = 0
+    while i < cfg.n_requests or sched.pending:
+        now = clock.now() - t0
+        while i < cfg.n_requests and arrivals[i] <= now:
+            sched.submit(pending[i])
+            i += 1
+        batch = sched.schedule()
+        if not batch:
+            if sched.wait_for_progress():
+                continue
+            if i < cfg.n_requests:       # idle until the next arrival
+                clock.sleep(max(1e-6, arrivals[i] - (clock.now() - t0)))
+                continue
+            break                        # queue drained, nothing in flight
+        for req in batch:
+            sid = req.session
+            hit, slots = arena.probe(req.page_keys, count=False)
+            if not hit.all():
+                # evicted between scheduling and execution (sync staging for
+                # a later batch member can displace an earlier member's
+                # page); the request stays queued and is retried next round
+                req.state = "queued"
+                continue
+            pages = arena.gather(jnp.asarray(slots))["state"]
+            pos = jnp.int32(req.meta["pos"])
+            tok = jnp.asarray([[1]], jnp.int32)
+            tw = time.perf_counter()
+            logits, pages2, aux2 = step(params, pages, session_aux[sid],
+                                        tok, pos)
+            logits.block_until_ready()
+            clock.advance(time.perf_counter() - tw)
+            arena.stage(jnp.asarray(slots), {"state": pages2})
+            session_aux[sid] = aux2
+            req.meta["pos"] += 1
+            sched.complete_token(req, dirty_keys=req.page_keys)
 
-    pf.stop_flag = True
-    lat = np.asarray(ttfts)
-    return {"p50": float(np.percentile(lat, 50)),
-            "p99": float(np.percentile(lat, 99)),
-            "mean": float(lat.mean()),
-            "store_reads": store.reads,
-            "prefetched": pf.prefetched,
-            "hit_rate": cache.hit_rate}
+    sched.drain_dirty()
+    out = sched.stats()
+    out["n_pages_per_session"] = pager.n_pages
+    return out
 
 
 def main():
@@ -196,18 +234,29 @@ def main():
     ap.add_argument("--arch", default="gemma-7b")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--sessions", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=400.0)
+    ap.add_argument("--modes", default="sync,async,prefetch")
+    ap.add_argument("--wall-clock", action="store_true")
     args = ap.parse_args()
+    modes = args.modes.split(",")
+    bad = [m for m in modes if m not in ("sync", "async", "prefetch")]
+    if bad:
+        ap.error(f"unknown mode(s) {bad}; choose from sync,async,prefetch")
     cfg = ServeConfig(arch=args.arch, n_requests=args.requests,
-                      n_sessions=args.sessions)
-    base = run_serving(cfg, prefetch=False)
-    kp = run_serving(cfg, prefetch=True)
-    print(f"[serve] baseline   p50={base['p50']*1e3:.1f}ms "
-          f"p99={base['p99']*1e3:.1f}ms hit={base['hit_rate']:.2f}")
-    print(f"[serve] prefetch   p50={kp['p50']*1e3:.1f}ms "
-          f"p99={kp['p99']*1e3:.1f}ms hit={kp['hit_rate']:.2f} "
-          f"(prefetched {kp['prefetched']})")
-    print(f"[serve] TTFT p50 speedup {base['p50']/kp['p50']:.2f}x, "
-          f"p99 {base['p99']/kp['p99']:.2f}x")
+                      n_sessions=args.sessions, arrival_rate=args.rate,
+                      wall_clock=args.wall_clock)
+    res = {m: run_serving(cfg, m) for m in modes}
+    for m, r in res.items():
+        print(f"[serve] {m:8s} ttft p50={r['ttft_p50']*1e3:7.2f}ms "
+              f"p99={r['ttft_p99']*1e3:7.2f}ms "
+              f"hit={r['arena_hit_rate']:.2f} "
+              f"overlap={r['staging_overlap']:.2f} "
+              f"wb={r['store_writebacks']}")
+    if "sync" in res and "prefetch" in res:
+        print(f"[serve] prefetch TTFT speedup "
+              f"p50 {res['sync']['ttft_p50']/res['prefetch']['ttft_p50']:.2f}x"
+              f", p99 "
+              f"{res['sync']['ttft_p99']/res['prefetch']['ttft_p99']:.2f}x")
 
 
 if __name__ == "__main__":

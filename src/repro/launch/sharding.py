@@ -93,7 +93,9 @@ def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
                 continue
             axes = ok
         used.update(axes)
-        out.append(axes[0] if len(axes) == 1 else tuple(axes))
+        # preserve the rule's tuple-ness: current PartitionSpec no longer
+        # treats 'data' and ('data',) as equal
+        out.append(axes[0] if isinstance(axis, str) else tuple(axes))
     return P(*out)
 
 

@@ -462,11 +462,17 @@ class StatefulOp(Operator):
 
     def handle_parked(self, sub: int, tup: Tuple_) -> float:
         state = self.caches[sub].lookup(tup.key, tup.ts)
-        if state is None:                   # evicted before processing
-            state = self.backends[sub].read(tup.key, self.state_size)
+        refetch = 0.0
+        if state is None:                   # evicted before processing:
+            # the refetch is synchronous on the tuple path, so it is charged
+            # at full backend latency (presence-aware, like the sync path)
+            state, refetch = self.backends[sub].fetch(tup.key,
+                                                      self.state_size)
             self.caches[sub].insert(tup.key, state, tup.ts,
                                     size=self.state_size)
-        return ASYNC_RESUME + self._apply(sub, tup, state)
+            self.managers[sub].record_access_latency(refetch)
+            self.blocked_time[sub] += refetch
+        return ASYNC_RESUME + refetch + self._apply(sub, tup, state)
 
     def _start(self, sub: int) -> None:
         # parked tuples resume through the ready queue with full processing
@@ -625,9 +631,20 @@ class Engine:
         out["net_overhead"] = hint_bytes / max(1, data_bytes)
         for name, op in self.operators.items():
             if isinstance(op, StatefulOp):
-                cache = op.caches[0]
                 out[f"{name}_hit_rate"] = sum(
                     c.hits for c in op.caches) / max(
                     1, sum(c.hits + c.misses for c in op.caches))
                 out[f"{name}_queued"] = sum(len(q) for q in op.queues)
+                out[f"{name}_backend_reads"] = sum(
+                    b.reads for b in op.backends)
+                out[f"{name}_backend_writes"] = sum(
+                    b.writes for b in op.backends)
+                out[f"{name}_backend_bytes_read"] = sum(
+                    b.bytes_read for b in op.backends)
+                out[f"{name}_backend_bytes_written"] = sum(
+                    b.bytes_written for b in op.backends)
+                out[f"{name}_prefetch_hits"] = sum(
+                    m.prefetch_hits for m in op.managers)
+                out[f"{name}_hints_received"] = sum(
+                    m.hints_received for m in op.managers)
         return out

@@ -1,0 +1,23 @@
+"""Import hypothesis if available; otherwise stub the decorators so only
+the property tests skip and the plain unit tests in the module still run
+(the dev extra is optional: ``pip install .[dev]``)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (pip install .[dev])")(fn)

@@ -1,77 +1,60 @@
-"""Device-side integration of the paper's technique: the Timestamp-Aware
-Cache (tac_jax) manages PHYSICAL page slots, and its probe results form the
-page table that the paged decode-attention Pallas kernel dereferences.
+"""Device-side integration of the paper's technique: the arena's TAC page
+table assigns PHYSICAL page slots, and the paged decode-attention Pallas
+kernel dereferences them.
 
 This is the TPU-serving analogue of cache -> key-value store indirection:
-prefetched KV pages are admitted with hint timestamps, the probe yields slot
-ids, and attention over the scattered physical pages must equal dense
-attention over the logical sequence.
+prefetched KV pages are admitted with hint timestamps through the BATCHED
+arena APIs (one fused admit + one scatter for all pages — no per-page
+Python staging loop), the probe yields the page table, and attention over
+the scattered physical pages must equal dense attention over the logical
+sequence.
 """
-import jax
+import math
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tac_jax
 from repro.kernels.decode_attention.ops import paged_decode_attention
-from repro.kernels.tac_probe.ops import bucket_of, tac_probe
+from repro.serving import PagedStateArena
 
 
 def _page_key(seq: int, page: int) -> int:
     return seq * 1024 + page + 1
 
 
-def test_tac_managed_paged_attention_matches_dense():
+def test_arena_managed_paged_attention_matches_dense():
     rng = np.random.RandomState(0)
     B, H, d = 2, 4, 32
     page, pages_per_seq = 16, 3
-    n_buckets, ways = 8, 4
-    n_slots = n_buckets * ways
-
-    # physical page pool + device TAC managing which logical page sits where
-    k_pages = jnp.zeros((n_slots, page, d), jnp.float32)
-    v_pages = jnp.zeros((n_slots, page, d), jnp.float32)
-    state = tac_jax.init(n_buckets, ways, 1)      # values unused; slots only
+    arena = PagedStateArena(n_buckets=8, ways=4,
+                            pools={"k": ((page, d), jnp.float32),
+                                   "v": ((page, d), jnp.float32)})
 
     logical_k = rng.randn(B, pages_per_seq * page, d).astype(np.float32)
     logical_v = rng.randn(B, pages_per_seq * page, d).astype(np.float32)
 
-    # admit every logical page with its hint timestamp (prefetch)
-    for b in range(B):
-        for p in range(pages_per_seq):
-            key = _page_key(b, p)
-            state = tac_jax.admit(state, jnp.asarray([key], jnp.int32),
-                                  jnp.asarray([float(100 + p)]),
-                                  jnp.zeros((1, 1)))
-            # find the slot the TAC chose and stage the page there
-            _, hit, way = tac_probe(jnp.asarray([key], jnp.int32),
-                                    state.keys, state.vals)
-            assert bool(hit[0])
-            bucket = int(np.asarray(bucket_of(
-                jnp.asarray([key], jnp.int32), n_buckets))[0])
-            slot = bucket * ways + int(np.asarray(way)[0])
-            k_pages = k_pages.at[slot].set(
-                logical_k[b, p * page:(p + 1) * page])
-            v_pages = v_pages.at[slot].set(
-                logical_v[b, p * page:(p + 1) * page])
+    # admit EVERY logical page in one batched call (hint timestamps), then
+    # stage all page contents with one scatter per pool — the serving path
+    keys = np.asarray([[_page_key(b, p) for p in range(pages_per_seq)]
+                       for b in range(B)], np.int32)
+    ts = np.asarray([[100.0 + p for p in range(pages_per_seq)]
+                     for b in range(B)], np.float32)
+    adm = arena.admit(keys.reshape(-1), ts.reshape(-1))
+    arena.stage(adm.slots,
+                {"k": jnp.asarray(logical_k.reshape(-1, page, d)),
+                 "v": jnp.asarray(logical_v.reshape(-1, page, d))})
 
-    # build the page table from TAC probes (the serving hot path)
-    table = np.zeros((B, pages_per_seq), np.int32)
-    for b in range(B):
-        keys = jnp.asarray([_page_key(b, p) for p in range(pages_per_seq)],
-                           jnp.int32)
-        _, hit, ways_found = tac_probe(keys, state.keys, state.vals)
-        assert bool(np.asarray(hit).all()), "prefetched pages must be resident"
-        buckets = np.asarray(bucket_of(keys, n_buckets))
-        table[b] = buckets * ways + np.asarray(ways_found)
+    # build the page table from one batched probe (the serving hot path)
+    hit, table = arena.page_table(jnp.asarray(keys))
+    assert hit.all(), "prefetched pages must be resident"
 
     q = jnp.asarray(rng.randn(B, H, d).astype(np.float32))
     seq_lens = jnp.asarray([pages_per_seq * page, 2 * page + 5])
 
-    out = paged_decode_attention(q, k_pages, v_pages, jnp.asarray(table),
-                                 seq_lens)
+    out = paged_decode_attention(q, arena.pools["k"], arena.pools["v"],
+                                 table, seq_lens)
 
     # dense reference over the logical layout
-    import math
     s = np.einsum("bhd,btd->bht", np.asarray(q), logical_k) / math.sqrt(d)
     for b in range(B):
         s[b, :, int(seq_lens[b]):] = -1e30
@@ -81,20 +64,22 @@ def test_tac_managed_paged_attention_matches_dense():
     np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5, rtol=2e-5)
 
 
-def test_tac_eviction_frees_slots_for_new_pages():
+def test_arena_eviction_frees_slots_for_new_pages():
     """When the cache is full, admitting a new page must evict the oldest-
-    timestamp page and reuse its slot (the paper's eviction rule on device)."""
-    state = tac_jax.init(1, 2, 1)                 # one bucket, two slots
-    state = tac_jax.admit(state, jnp.asarray([_page_key(0, 0)], jnp.int32),
-                          jnp.asarray([10.0]), jnp.zeros((1, 1)))
-    state = tac_jax.admit(state, jnp.asarray([_page_key(0, 1)], jnp.int32),
-                          jnp.asarray([50.0]), jnp.zeros((1, 1)))
+    timestamp page and reuse its slot (the paper's eviction rule on device),
+    and a renewed page must be protected."""
+    arena = PagedStateArena(n_buckets=1, ways=2,
+                            pools={"k": ((4, 2), jnp.float32)})
+    adm = arena.admit(np.asarray([_page_key(0, 0), _page_key(0, 1)],
+                                 np.int32),
+                      np.asarray([10.0, 50.0], np.float32))
+    assert (adm.evicted_keys == -1).all()
     # renew page 0 with a future hint: page 1 becomes the eviction victim
-    state = tac_jax.renew(state, jnp.asarray([_page_key(0, 0)], jnp.int32),
-                          jnp.asarray([99.0]))
-    state = tac_jax.admit(state, jnp.asarray([_page_key(0, 2)], jnp.int32),
-                          jnp.asarray([60.0]), jnp.zeros((1, 1)))
-    keys = jnp.asarray([_page_key(0, 0), _page_key(0, 1), _page_key(0, 2)],
-                       jnp.int32)
-    _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(3))
-    assert list(np.asarray(hit)) == [True, False, True]
+    arena.renew(np.asarray([_page_key(0, 0)], np.int32),
+                np.asarray([99.0], np.float32))
+    adm2 = arena.admit(np.asarray([_page_key(0, 2)], np.int32),
+                       np.asarray([60.0], np.float32))
+    assert list(adm2.evicted_keys) == [_page_key(0, 1)]
+    hit, _ = arena.probe(np.asarray(
+        [_page_key(0, 0), _page_key(0, 1), _page_key(0, 2)], np.int32))
+    assert list(hit) == [True, False, True]

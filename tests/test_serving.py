@@ -1,0 +1,212 @@
+"""Tests for the paged session-state serving subsystem.
+
+Covers the ISSUE acceptance points: batched-admit equivalence vs the
+sequential ``tac_jax.admit`` scan, eviction write-back of dirty pages
+through the tiered store, arena-backed paged attention (see also
+test_integration_tac_paged.py), and the scheduler's sync/async/prefetch
+TTFT ordering under equal offered load.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tac_jax
+from repro.serving import (ContinuousBatchingScheduler, PagedStateArena,
+                           Request, ServingMetrics, SimClock, TieredStore,
+                           percentiles)
+
+
+# ------------------------------------------------------------- admit_batch
+@pytest.mark.parametrize("seed", range(4))
+def test_admit_batch_matches_sequential_admit(seed):
+    """admit_batch must equal the lax.scan admit on any trace, including
+    duplicate keys and same-bucket collisions (resolved in batch order)."""
+    rng = np.random.RandomState(seed)
+    nb, ways, D = (1, 4, 2) if seed % 2 else (4, 3, 2)
+    state_seq = tac_jax.init(nb, ways, D)
+    state_bat = tac_jax.init(nb, ways, D)
+    for _ in range(3):                       # successive batches compose too
+        B = rng.randint(1, 16)
+        keys = jnp.asarray(rng.randint(0, 12, B), jnp.int32)
+        ts = jnp.asarray(rng.uniform(1, 100, B), jnp.float32)
+        vals = jnp.asarray(rng.randn(B, D), jnp.float32)
+        dirty = jnp.asarray(rng.rand(B) < 0.5)
+        state_seq = tac_jax.admit(state_seq, keys, ts, vals, dirty)
+        res = tac_jax.admit_batch(state_bat, keys, ts, vals, dirty)
+        state_bat = res.state
+    np.testing.assert_array_equal(np.asarray(state_seq.keys),
+                                  np.asarray(state_bat.keys))
+    np.testing.assert_allclose(np.asarray(state_seq.ts),
+                               np.asarray(state_bat.ts))
+    np.testing.assert_array_equal(np.asarray(state_seq.dirty),
+                                  np.asarray(state_bat.dirty))
+    np.testing.assert_allclose(np.asarray(state_seq.vals),
+                               np.asarray(state_bat.vals))
+
+
+def test_admit_batch_reports_slots_and_victims():
+    state = tac_jax.init(1, 2, 1)
+    res = tac_jax.admit_batch(state, jnp.asarray([1, 2], jnp.int32),
+                              jnp.asarray([10.0, 20.0]))
+    assert set(np.asarray(res.slots).tolist()) == {0, 1}
+    assert (np.asarray(res.evicted_keys) == -1).all()
+    # bucket full: admitting key 3 must displace min-ts key 1
+    res2 = tac_jax.admit_batch(res.state, jnp.asarray([3], jnp.int32),
+                               jnp.asarray([30.0]))
+    assert list(np.asarray(res2.evicted_keys)) == [1]
+
+
+# ------------------------------------------------------------------- arena
+def test_arena_stage_gather_roundtrip():
+    arena = PagedStateArena(4, 2, {"state": ((8, 4), jnp.float32)})
+    rng = np.random.RandomState(0)
+    keys = np.asarray([3, 9, 17], np.int32)
+    blocks = rng.randn(3, 8, 4).astype(np.float32)
+    adm = arena.admit(keys, np.asarray([1.0, 2.0, 3.0], np.float32))
+    arena.stage(adm.slots, {"state": jnp.asarray(blocks)})
+    hit, slots = arena.probe(keys)
+    assert hit.all()
+    np.testing.assert_array_equal(slots, adm.slots)
+    got = np.asarray(arena.gather(jnp.asarray(slots))["state"])
+    np.testing.assert_allclose(got, blocks)
+
+
+def test_arena_eviction_surfaces_dirty_victims_with_contents():
+    """A dirty page displaced by admission must come back (key, dirty bit,
+    page contents gathered BEFORE restaging overwrites the slot)."""
+    arena = PagedStateArena(1, 2, {"state": ((4, 2), jnp.float32)})
+    rng = np.random.RandomState(1)
+    k01 = np.asarray([1, 2], np.int32)
+    blocks = rng.randn(2, 4, 2).astype(np.float32)
+    adm = arena.admit(k01, np.asarray([10.0, 20.0], np.float32))
+    arena.stage(adm.slots, {"state": jnp.asarray(blocks)})
+    arena.mark_dirty(np.asarray([1], np.int32))      # decode mutated page 1
+    adm2 = arena.admit(np.asarray([5], np.int32),
+                       np.asarray([30.0], np.float32))
+    assert list(adm2.evicted_keys) == [1]
+    assert list(adm2.evicted_dirty) == [True]
+    victim = np.asarray(adm2.evicted_blocks["state"][0])
+    np.testing.assert_allclose(victim, blocks[0])    # pre-overwrite contents
+
+
+def test_arena_flush_dirty_clears_and_returns_pages():
+    arena = PagedStateArena(2, 2, {"state": ((4, 1), jnp.float32)})
+    keys = np.asarray([1, 2, 3], np.int32)
+    adm = arena.admit(keys, np.ones(3, np.float32))
+    arena.stage(adm.slots, {"state": jnp.ones((3, 4, 1))})
+    arena.mark_dirty(keys[:2])
+    fkeys, blocks = arena.flush_dirty()
+    assert set(fkeys.tolist()) == {1, 2}
+    assert blocks["state"].shape[0] == 2
+    fkeys2, _ = arena.flush_dirty()
+    assert fkeys2.size == 0                          # bits cleared
+
+
+# ------------------------------------------------------------ tiered store
+def test_store_writeback_then_restage_roundtrips_content():
+    store = TieredStore(page_bytes=64, workers=2)
+    store.seed(7, {"state": np.zeros((2, 2), np.float32)})
+    newer = {"state": np.ones((2, 2), np.float32)}
+    store.writeback(7, newer)                        # dirty victim
+    store.request_stage([7], now=0.0)
+    done = store.poll(now=10.0)
+    assert len(done) == 1
+    np.testing.assert_allclose(done[0][1]["state"], newer["state"])
+    assert store.persist() == 1                      # host -> backing flush
+    blocks, _ = store.backing.fetch(7)
+    np.testing.assert_allclose(blocks["state"], newer["state"])
+
+
+def test_store_async_staging_hides_latency_sync_charges_it():
+    store = TieredStore(page_bytes=1024, workers=4)
+    for k in (1, 2, 3):
+        store.seed(k, {"state": np.float32(k)})
+    store.request_stage([1, 2], now=0.0)
+    assert store.poll(now=0.0) == []                 # I/O still in flight
+    assert len(store.poll(now=1.0)) == 2
+    _, lat = store.fetch_sync([3], now=1.0)
+    assert lat > 0.0
+    s = store.stats()
+    assert s["store_hidden_latency"] > 0
+    assert s["store_critical_latency"] == pytest.approx(lat)
+    assert 0.0 < s["staging_overlap"] < 1.0
+
+
+# --------------------------------------------------------------- scheduler
+def _run_mode(mode, n_requests=24, rate=2000.0, decode_s=0.8e-3):
+    arena = PagedStateArena(6, 2, {"state": ((4, 2), jnp.float32)})
+    store = TieredStore(page_bytes=32 * 1024, workers=4)
+    rng = np.random.RandomState(0)
+    n_sessions, pages_per = 8, 3
+
+    def pkeys(sid):
+        return np.asarray([sid * 64 + p + 1 for p in range(pages_per)],
+                          np.int32)
+
+    for sid in range(n_sessions):
+        for k in pkeys(sid):
+            store.seed(int(k), {"state": np.zeros((4, 2), np.float32)})
+    clock = SimClock()
+    sched = ContinuousBatchingScheduler(arena, store, mode=mode, max_batch=2,
+                                        clock=clock, metrics=ServingMetrics())
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    reqs = [Request(rid=i, session=int(rng.randint(n_sessions)),
+                    page_keys=None, n_tokens=2) for i in range(n_requests)]
+    for r in reqs:
+        r.page_keys = pkeys(r.session)
+    i = 0
+    while i < n_requests or sched.pending:
+        while i < n_requests and arrivals[i] <= clock.now():
+            sched.submit(reqs[i])
+            i += 1
+        batch = sched.schedule()
+        if not batch:
+            if sched.wait_for_progress():
+                continue
+            if i < n_requests:
+                clock.sleep(max(1e-6, arrivals[i] - clock.now()))
+                continue
+            break
+        for req in batch:
+            clock.advance(decode_s)
+            sched.complete_token(req, dirty_keys=req.page_keys[:1])
+    return sched.stats()
+
+
+def test_scheduler_prefetch_beats_on_demand_ttft_at_equal_load():
+    res = {m: _run_mode(m) for m in ("sync", "async", "prefetch")}
+    assert res["prefetch"]["ttft_p99"] < res["sync"]["ttft_p99"]
+    assert res["prefetch"]["ttft_p50"] <= res["async"]["ttft_p50"] * 1.01
+    # same offered load -> same token count served
+    assert res["prefetch"]["n_tokens"] == res["sync"]["n_tokens"]
+    # prefetch/async hide staging I/O behind compute; sync cannot
+    assert res["prefetch"]["staging_overlap"] == pytest.approx(1.0)
+    assert res["sync"]["staging_overlap"] < 1.0
+
+
+def test_scheduler_parks_until_pages_resident():
+    arena = PagedStateArena(4, 2, {"state": ((2, 1), jnp.float32)})
+    store = TieredStore(page_bytes=1 << 20, workers=1)   # slow: ~ms reads
+    store.seed(1, {"state": np.zeros((2, 1), np.float32)})
+    clock = SimClock()
+    sched = ContinuousBatchingScheduler(arena, store, mode="async",
+                                        clock=clock)
+    req = Request(rid=0, session=0, page_keys=np.asarray([1], np.int32))
+    sched.submit(req)
+    assert sched.schedule() == []                    # staging in flight
+    assert req.state == "parked"
+    assert sched.wait_for_progress()
+    batch = sched.schedule()                         # completion absorbed
+    assert batch == [req]
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_ttft_tpot_split():
+    m = ServingMetrics()
+    m.record_enqueue(0, 1.0)
+    m.record_token(0, 1.5)                           # ttft = 0.5
+    m.record_token(0, 1.7)                           # tpot = 0.2
+    m.record_done(0, 1.7)
+    assert m.ttft == [pytest.approx(0.5)]
+    assert m.tpot == [pytest.approx(0.2)]
+    assert percentiles([1.0, 2.0, 3.0])["p50"] == 2.0

@@ -4,6 +4,9 @@ import pytest
 from repro.streaming.nexmark import NexmarkConfig, build_query
 from repro.streaming.synthetic import SyntheticConfig, build_synthetic
 
+# full-duration discrete-event sims: excluded from the quick tier-1 loop
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def q13_results():
@@ -14,7 +17,7 @@ def q13_results():
         eng = build_query("q13", policy, mode, cfg, cache_entries=512,
                           parallelism=2, source_parallelism=1, io_workers=2)
         out[mode if policy == "lru" else "prefetch"] = \
-            eng.run(duration=4.0, warmup=2.0)
+            eng.run(duration=3.0, warmup=1.5)
     return out
 
 
@@ -49,7 +52,7 @@ def test_adaptive_lookahead_switches_on_mismatch():
     discard udf0."""
     cfg = SyntheticConfig(rate=10_000, t_mismatch=3.0, t_latency_drop=1e9)
     eng = build_synthetic(cfg, lookaheads=("udf0",))
-    eng.run(duration=10.0, warmup=1.0)
+    eng.run(duration=8.0, warmup=1.0)
     reasons = [w for _, _, w, _ in eng.controller.switch_log]
     assert "activate" in reasons
     assert "mismatch" in reasons

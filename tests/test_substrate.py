@@ -68,6 +68,7 @@ def test_quantize_int8_range():
                                atol=float(s))
 
 
+@pytest.mark.slow
 def test_supervisor_recovers_from_failure_and_loss_decreases():
     state, step_fn, model, cfg = build_training(
         "gemma-7b", smoke=True, batch=4, seq=32, n_micro=1)
@@ -81,6 +82,7 @@ def test_supervisor_recovers_from_failure_and_loss_decreases():
         assert rep.losses[-1] < rep.losses[0]
 
 
+@pytest.mark.slow
 def test_supervisor_detects_stragglers():
     state, step_fn, model, cfg = build_training(
         "gemma-7b", smoke=True, batch=2, seq=16, n_micro=1)
@@ -94,6 +96,7 @@ def test_supervisor_detects_stragglers():
         assert rep.stragglers >= 1
 
 
+@pytest.mark.slow
 def test_compressed_training_converges():
     state, step_fn, model, cfg = build_training(
         "gemma-7b", smoke=True, batch=4, seq=32, n_micro=1, compress=True)

@@ -12,6 +12,9 @@ import pytest
 
 from repro.streaming.nexmark import NexmarkConfig, build_query
 
+# end-to-end sims + a real jitted model: excluded from the quick tier-1 loop
+pytestmark = pytest.mark.slow
+
 
 def test_end_to_end_keyed_prefetching_beats_sync_caching():
     cfg = NexmarkConfig(rate=22_000, active_window=40.0)
@@ -20,7 +23,7 @@ def test_end_to_end_keyed_prefetching_beats_sync_caching():
                                ("kp", "tac", "prefetch")]:
         eng = build_query("q13", policy, mode, cfg, cache_entries=512,
                           parallelism=2, source_parallelism=1, io_workers=2)
-        res[name] = eng.run(duration=4.0, warmup=2.0)
+        res[name] = eng.run(duration=3.0, warmup=1.5)
     assert res["kp"]["p999"] < res["sync"]["p999"]
     assert res["kp"]["throughput"] >= 0.98 * res["sync"]["throughput"]
     assert res["kp"]["stateful_hit_rate"] > 0.9
@@ -29,9 +32,9 @@ def test_end_to_end_keyed_prefetching_beats_sync_caching():
 def test_end_to_end_serving_prefetch_improves_tail_ttft():
     from repro.launch.serve import ServeConfig, run_serving
     cfg = ServeConfig(n_sessions=12, n_requests=24, prompt_len=16,
-                      store_latency=0.03, cache_sessions=6,
-                      arrival_gap=0.008)
-    base = run_serving(cfg, prefetch=False)
-    kp = run_serving(cfg, prefetch=True)
-    assert kp["hit_rate"] > base["hit_rate"]
-    assert kp["p99"] < base["p99"] * 1.05   # at worst equal, typically ~2x
+                      decode_tokens=2, store_latency=0.03, cache_sessions=6,
+                      arrival_rate=500.0)
+    base = run_serving(cfg, "sync")
+    kp = run_serving(cfg, "prefetch")
+    assert kp["staging_overlap"] > base["staging_overlap"]
+    assert kp["ttft_p99"] < base["ttft_p99"]
