@@ -1,0 +1,148 @@
+"""Sharded state plane benchmark: NEXMark q3/q4 across 1/2/4/8 shards
+with a mid-run key-range rebalance (DESIGN.md §9).
+
+Weak scaling: the offered rate grows linearly with the shard-owner count
+(per-shard rate calibrated so the on-demand sync baseline runs near its
+per-owner sustainable limit), the stateful operator runs `N` subtasks
+owning `4N` hash shards, and halfway through the measured window two of
+subtask 0's shards migrate to the last subtask — drain, bulk transfer,
+re-admit with preserved timestamps, replay.  Data channels run Flink's
+low-latency gear (2 ms buffer timeout) so the network floor does not mask
+state-access latency.
+
+Emits ``BENCH_sharding.json``: per query x shard count x mode, overall and
+migration-window latency percentiles plus the per-shard routing counters.
+Expectation (ISSUE 2): prefetch keeps a p99 advantage over on-demand at
+4+ shards, including across the migration window.
+
+    PYTHONPATH=src python benchmarks/sharding.py --shards 1,2,4,8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODES = {"sync": ("lru", "sync"), "async": ("lru", "async"),
+         "prefetch": ("tac", "prefetch")}
+
+# per-shard offered rates (events/s); q3's stateful traffic is only the
+# person+auction 8%, so its per-shard rate is higher for equal pressure
+RATES = {"q3": 24_000.0, "q4": 13_000.0}
+CACHE_ENTRIES = {"q3": 512, "q4": 384}
+# q3 reads person profiles from a remote-KV tier (DISAGGREGATED) and runs
+# the tightest buffer timeout: its stateful traffic is sparse (8%), so the
+# state-access latency has to be visible above the network-flush floor
+BACKENDS = {"q3": "disagg", "q4": "nvme"}
+BUFFER_TIMEOUTS = {"q3": 0.0003, "q4": 0.002}
+MIGRATION_WINDOW = 0.4          # seconds after the rebalance event
+
+
+def run_one(query: str, n_owners: int, mode: str, duration: float,
+            warmup: float, rate_per_shard: float, seed: int = 7):
+    from repro.streaming.backend import DISAGGREGATED, LOCAL_NVME
+    from repro.streaming.nexmark import NexmarkConfig, build_query
+
+    policy, access = MODES[mode]
+    n_shards = 4 * n_owners
+    cfg = NexmarkConfig(rate=rate_per_shard * n_owners,
+                        active_window=30.0, seed=seed)
+    eng = build_query(query, policy, access, cfg,
+                      cache_entries=CACHE_ENTRIES[query],
+                      backend=DISAGGREGATED if BACKENDS[query] == "disagg"
+                      else LOCAL_NVME,
+                      parallelism=n_owners,
+                      source_parallelism=max(1, n_owners // 2),
+                      io_workers=3, n_shards=n_shards,
+                      buffer_timeout=BUFFER_TIMEOUTS[query])
+    t_mig = warmup + duration / 2
+    migrated = []
+    if n_owners > 1:
+        # rebalance: two of subtask 0's shards move to the last subtask
+        for shard in (0, n_owners):         # both owned by sub 0 (s % N)
+            eng.migrate_shard("stateful", shard, n_owners - 1, at=t_mig)
+            migrated.append(shard)
+    m = eng.run(duration=duration, warmup=warmup)
+
+    lat = np.asarray(eng.latencies)
+    lat_t = np.asarray(eng.latency_t)
+    out = {"p50": m["p50"], "p99": m["p99"], "p999": m["p999"],
+           "throughput": m["throughput"],
+           "hit_rate": m.get("stateful_hit_rate", 0.0),
+           "util_stateful": m.get("util_stateful", 0.0),
+           "prefetch_hits": m.get("stateful_prefetch_hits", 0),
+           "backend_reads": m.get("stateful_backend_reads", 0),
+           "shard_plane": m.get("stateful_shard_plane"),
+           "migrated_shards": migrated}
+    if migrated and len(lat):
+        win = (lat_t >= t_mig) & (lat_t <= t_mig + MIGRATION_WINDOW)
+        post = lat_t > t_mig + MIGRATION_WINDOW
+        out["migration_window_p99"] = float(
+            np.percentile(lat[win], 99)) if win.any() else None
+        out["post_migration_p99"] = float(
+            np.percentile(lat[post], 99)) if post.any() else None
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", default="q3,q4")
+    ap.add_argument("--shards", default="1,2,4,8")
+    ap.add_argument("--modes", default="sync,prefetch")
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--warmup", type=float, default=1.0)
+    ap.add_argument("--out", default="BENCH_sharding.json")
+    args = ap.parse_args()
+
+    shard_counts = [int(s) for s in args.shards.split(",")]
+    result = {"config": {"shards": shard_counts,
+                         "rates_per_shard": RATES,
+                         "cache_entries": CACHE_ENTRIES,
+                         "duration": args.duration, "warmup": args.warmup,
+                         "backends": BACKENDS,
+                         "buffer_timeouts": BUFFER_TIMEOUTS,
+                         "n_bins_per_owner": 4,
+                         "migration_window": MIGRATION_WINDOW}}
+    for query in args.queries.split(","):
+        result[query] = {}
+        for n in shard_counts:
+            result[query][str(n)] = {}
+            for mode in args.modes.split(","):
+                t0 = time.time()
+                r = run_one(query, n, mode, args.duration, args.warmup,
+                            RATES[query])
+                r["bench_wall_s"] = time.time() - t0
+                result[query][str(n)][mode] = r
+                mig_ms = (r.get("migration_window_p99") or 0) * 1e3
+                print(f"[bench/sharding] {query} shards={n:<2d} {mode:8s} "
+                      f"p50={r['p50']*1e3:6.2f}ms p99={r['p99']*1e3:7.2f}ms"
+                      f" hit={r['hit_rate']:.2f}"
+                      f" mig_p99={mig_ms:7.2f}ms"
+                      f" ({r['bench_wall_s']:.0f}s)",
+                      file=sys.stderr)
+        # headline: prefetch p99 advantage per shard count
+        adv = {}
+        for n in shard_counts:
+            rs = result[query][str(n)]
+            if "sync" in rs and "prefetch" in rs:
+                adv[str(n)] = rs["sync"]["p99"] / max(1e-12,
+                                                      rs["prefetch"]["p99"])
+        result[query]["p99_speedup_by_shards"] = adv
+        print(f"[bench/sharding] {query} prefetch p99 speedup by shards: "
+              + ", ".join(f"{k}x{v:.2f}" for k, v in adv.items()),
+              file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(json.dumps({q: result[q].get("p99_speedup_by_shards")
+                      for q in args.queries.split(",")}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

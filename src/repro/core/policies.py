@@ -42,6 +42,22 @@ class _BaseCache:
         self.writebacks += 1
         return e
 
+    def export_entries(self, pred) -> List[_E]:
+        """Shard migration drain: pop every entry (resident + eviction
+        buffer) whose key satisfies ``pred``.  ``_E`` carries no timestamp
+        (LRU/Clock order is positional), so the destination re-inserts at
+        migration time — the TAC keeps true timestamps (core/tac.py)."""
+        out = []
+        for key in [k for k in self.entries if pred(k)]:
+            e = self.entries.pop(key)
+            self.used -= e.size
+            out.append(e)
+        for key in [k for k in self.evict_buffer if pred(k)]:
+            out.append(self.evict_buffer.pop(key))
+        if hasattr(self, "_hand"):
+            self._hand = []               # clock hand invalidated by removal
+        return out
+
     def flush_dirty(self) -> List[_E]:
         out = [e for e in self._iter_entries() if e.dirty]
         out += list(self.evict_buffer.values())

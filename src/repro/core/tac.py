@@ -167,6 +167,21 @@ class TimestampAwareCache:
             self._push(e)
         return True
 
+    def export_entries(self, pred: Callable[[Any], bool]) -> List[Entry]:
+        """Shard migration drain (DESIGN.md §9): pop every entry — resident
+        or staged in the eviction buffer — whose key satisfies ``pred``.
+        Timestamps and dirty bits ride along so the destination subtask
+        re-inserts with the SAME eviction priority; heap records left behind
+        go stale and are skipped lazily."""
+        out = []
+        for key in [k for k in self.entries if pred(k)]:
+            e = self.entries.pop(key)
+            self.used -= e.size
+            out.append(e)
+        for key in [k for k in self.evict_buffer if pred(k)]:
+            out.append(self.evict_buffer.pop(key))
+        return out
+
     def pop_writeback(self) -> Optional[Entry]:
         """State thread pool: take one dirty entry to write to the backend."""
         if not self.evict_buffer:

@@ -19,6 +19,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.tac_probe.ops import bucket_of, tac_probe
 
@@ -170,6 +171,117 @@ def admit_batch(state: TACState, keys: jax.Array, ts: jax.Array,
     _, state, slots, ev_k, ev_d = jax.lax.while_loop(
         lambda c: c[0] < n_rounds, round_body, init)
     return AdmitResult(state, slots, ev_k, ev_d)
+
+
+# ----------------------------------------------------------- sharded plane
+# Key ownership in the sharded state plane (DESIGN.md §9): non-negative
+# int32 keys are assigned to shards by modulo, which agrees with the
+# engine-side ``hash_partition`` for ints (CPython hash(i) == i for small
+# non-negative ints), so a hint routed host-side and a page admitted
+# device-side land at the same owner.
+
+def shard_of(keys: jax.Array, n_shards: int) -> jax.Array:
+    """Owning shard per key (device-side twin of ``hash_partition``)."""
+    return jnp.mod(jnp.asarray(keys, jnp.int32), n_shards)
+
+
+def shard_mask(keys: jax.Array, shard_id: int, n_shards: int) -> jax.Array:
+    """True where ``shard_id`` owns the key."""
+    return shard_of(keys, n_shards) == shard_id
+
+
+def probe_owned(state: TACState, keys: jax.Array, shard_id: int,
+                n_shards: int, interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shard-local probe: foreign keys (misrouted in the shard plane) are
+    forced to miss so a stray probe can never refresh another shard's
+    entries.  Returns (vals, hit, owned) — callers count ``~owned`` lanes
+    as misroutes, not misses."""
+    keys = jnp.asarray(keys, jnp.int32)
+    owned = shard_mask(keys, shard_id, n_shards)
+    vals, hit, _ = tac_probe(keys, state.keys, state.vals,
+                             interpret=interpret)
+    return vals, hit.astype(bool) & owned, owned
+
+
+def admit_owned(state: TACState, keys: jax.Array, ts: jax.Array,
+                shard_id: int, n_shards: int, vals: jax.Array = None,
+                dirty: jax.Array = None) -> Tuple[AdmitResult, int]:
+    """Shard-local admit: drops keys the shard does not own before the
+    batched admit (a misrouted admit would orphan a page — no hint or probe
+    would ever find it on this shard again).  Host-side filter (shapes are
+    data-dependent); returns (AdmitResult over the owned subset, n_dropped).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    owned = np.asarray(shard_mask(keys, shard_id, n_shards))
+    n_dropped = int((~owned).sum())
+    if n_dropped == 0:
+        return admit_batch(state, keys, ts, vals, dirty), 0
+    idx = np.nonzero(owned)[0]
+    sub = lambda a: None if a is None else jnp.asarray(a)[idx]
+    if len(idx) == 0:
+        empty = AdmitResult(state, jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), bool))
+        return empty, n_dropped
+    return admit_batch(state, sub(keys), sub(ts), sub(vals),
+                       sub(dirty)), n_dropped
+
+
+# --------------------------------------------------------------- migration
+class Exported(NamedTuple):
+    state: TACState           # source state with the entries cleared
+    keys: np.ndarray          # [M] exported keys
+    ts: np.ndarray            # [M] their timestamps (preserved end-to-end)
+    vals: np.ndarray          # [M, D] their value rows
+    dirty: np.ndarray         # [M] their dirty bits
+    slots: np.ndarray         # [M] flat source slots (page-payload gather)
+
+
+def export_mask(state: TACState, mask: np.ndarray) -> Exported:
+    """Migration drain: pop every resident entry selected by ``mask`` (a
+    host boolean over keys, e.g. a key range or ``shard_mask``) out of the
+    cache, preserving timestamps and dirty bits so the destination re-admits
+    them with the SAME eviction priority (Megaphone-style fluid migration
+    moves state, not recency).  Host-side: migrations are rare, bulk, and
+    off the tuple path."""
+    keys = np.asarray(state.keys)
+    sel = (keys >= 0) & np.asarray(mask)
+    if not sel.any():
+        return Exported(state, np.zeros((0,), np.int32),
+                        np.zeros((0,), np.float32),
+                        np.zeros((0, state.vals.shape[-1]), np.float32),
+                        np.zeros((0,), bool), np.zeros((0,), np.int32))
+    b, w = np.nonzero(sel)
+    slots = (b * state.keys.shape[1] + w).astype(np.int32)
+    out = Exported(
+        state._replace(
+            keys=state.keys.at[b, w].set(-1),
+            ts=state.ts.at[b, w].set(-jnp.inf),
+            dirty=state.dirty.at[b, w].set(False)),
+        keys[sel].astype(np.int32),
+        np.asarray(state.ts)[sel].astype(np.float32),
+        np.asarray(state.vals)[sel],
+        np.asarray(state.dirty)[sel],
+        slots)
+    return out
+
+
+def import_entries(state: TACState, keys: np.ndarray, ts: np.ndarray,
+                   vals: np.ndarray = None,
+                   dirty: np.ndarray = None) -> AdmitResult:
+    """Migration re-admit at the destination shard: a batched admit that
+    keeps the exported timestamps (NOT the migration time — a prefetched
+    page whose hint ts lies in the future must stay protected after the
+    move, DESIGN.md §9)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    if keys.shape[0] == 0:
+        return AdmitResult(state, jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), bool))
+    return admit_batch(state, keys, jnp.asarray(ts, jnp.float32),
+                       None if vals is None else jnp.asarray(vals),
+                       None if dirty is None else jnp.asarray(dirty, bool))
 
 
 def set_dirty(state: TACState, keys: jax.Array,

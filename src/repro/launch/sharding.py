@@ -57,7 +57,37 @@ def default_rules(multi_pod: bool) -> Dict[str, Axis]:
         "tp": "model",            # parameter tensor-parallel dim
         "fsdp": data,             # parameter FSDP dim (policy-gated)
         "opt_shard": data,        # ZeRO-1 optimizer-state sharding
+        "state_shard": data,      # sharded keyed-state plane: leading shard
+        #                           dim of stacked per-shard arenas (§9)
     }
+
+
+# ------------------------------------------------------ keyed-state shards
+# Placement for the sharded keyed-state plane (DESIGN.md §9): shards (hash
+# bins of the key space) are assigned to owners — engine subtasks or mesh
+# devices — round-robin, so consecutive shards land on distinct owners and
+# a contiguous shard range migrates with maximum source fan-out.
+
+def shard_owner_map(n_shards: int, n_owners: int) -> list:
+    """Round-robin shard->owner table.  ``ShardRouter`` builds its default
+    bin table from this; ``ShardPlane`` (streaming side, deliberately
+    jax-free) keeps an identical inline copy — change both together."""
+    if n_shards < n_owners:
+        raise ValueError(f"n_shards={n_shards} < n_owners={n_owners}")
+    return [s % n_owners for s in range(n_shards)]
+
+
+def mesh_shard_owners(mesh: Mesh, n_shards: int,
+                      axis: Axis = "data") -> list:
+    """Shard->owner table sized to one mesh axis (or axis tuple): owner i
+    is the i-th device coordinate along ``axis``, so per-shard arenas
+    co-locate with the mesh's data-parallel shards and a ``state_shard``-
+    annotated pool stack places its rows on their owners."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_owners = 1
+    for a in axes:
+        n_owners *= mesh.shape[a]
+    return shard_owner_map(n_shards, n_owners)
 
 
 def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int],

@@ -8,14 +8,16 @@ scheduler picks the request up.
     arena.py     - PagedStateArena: physical page pool + device TAC page table
     store.py     - TieredStore: arena <-> host DRAM <-> modelled backing tier
     scheduler.py - continuous-batching scheduler with enqueue-time hints
+    router.py    - ShardRouter: per-shard arenas/stores + key-range migration
     metrics.py   - TTFT/TPOT percentiles, hit-rate, staging-overlap accounting
 """
 from repro.serving.arena import PagedStateArena
 from repro.serving.metrics import ServingMetrics, percentiles
+from repro.serving.router import ShardRouter
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
                                      SimClock, WallClock)
 from repro.serving.store import TieredStore
 
 __all__ = ["PagedStateArena", "TieredStore", "ContinuousBatchingScheduler",
-           "Request", "ServingMetrics", "SimClock", "WallClock",
-           "percentiles"]
+           "Request", "ServingMetrics", "ShardRouter", "SimClock",
+           "WallClock", "percentiles"]

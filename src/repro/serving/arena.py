@@ -67,6 +67,8 @@ class PagedStateArena:
         probed every scheduler tick; counting those would turn the hit rate
         into a poll-frequency artifact)."""
         keys = jnp.asarray(keys, jnp.int32)
+        if keys.shape[0] == 0:                # empty batch: nothing to probe
+            return (np.zeros((0,), bool), np.zeros((0,), np.int32))
         _, hit_d, way = tac_probe(keys, self.tac.keys, self.tac.vals,
                                   interpret=self.interpret)
         bucket_d = bucket_of(keys, self.n_buckets)
@@ -101,7 +103,10 @@ class PagedStateArena:
 
     def renew(self, keys: jax.Array, ts: jax.Array) -> None:
         """Hint for already-resident pages: bump predicted relevance."""
-        self.tac = tac_jax.renew(self.tac, jnp.asarray(keys, jnp.int32),
+        keys = jnp.asarray(keys, jnp.int32)
+        if keys.shape[0] == 0:
+            return
+        self.tac = tac_jax.renew(self.tac, keys,
                                  jnp.asarray(ts, jnp.float32))
 
     # ------------------------------------------------------------- admission
@@ -112,6 +117,10 @@ class PagedStateArena:
         they can be overwritten, and returns everything the caller needs to
         stage new pages and write dirty victims back."""
         keys = jnp.asarray(keys, jnp.int32)
+        if keys.shape[0] == 0:                # empty batch: nothing to admit
+            return Admitted(np.zeros((0,), np.int32),
+                            np.zeros((0,), np.int32),
+                            np.zeros((0,), bool), {})
         res = tac_jax.admit_batch(
             self.tac, keys, jnp.asarray(ts, jnp.float32), None,
             None if dirty is None else jnp.asarray(dirty, bool))
@@ -137,6 +146,8 @@ class PagedStateArena:
         """Scatter N staged pages into their physical slots (one kernel
         launch per pool)."""
         slots = jnp.asarray(slots, jnp.int32)
+        if slots.shape[0] == 0:
+            return
         for name, blk in blocks.items():
             self.pools[name] = page_scatter(slots, blk.astype(
                 self.pools[name].dtype), self.pools[name],
@@ -149,11 +160,27 @@ class PagedStateArena:
         return {name: page_gather(slots, pool, interpret=self.interpret)
                 for name, pool in self.pools.items()}
 
+    # ------------------------------------------------------------- migration
+    def export_where(self, pred) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, Dict[str, jax.Array]]:
+        """Migration drain (DESIGN.md §9): pop every resident entry whose key
+        satisfies ``pred`` (vectorized numpy predicate) out of the page
+        table, gather its page contents (one batched ``page_gather`` per
+        pool), and return (keys, ts, dirty, blocks) with timestamps and
+        dirty bits preserved — the destination re-admits with the same
+        eviction priority via ``admit(keys, ts, dirty)`` + ``stage``."""
+        exp = tac_jax.export_mask(self.tac, pred(np.asarray(self.tac.keys)))
+        self.tac = exp.state
+        blocks = self.gather(jnp.asarray(exp.slots)) if len(exp.keys) else {}
+        return exp.keys, exp.ts, exp.dirty, blocks
+
     # ----------------------------------------------------------- dirty state
     def mark_dirty(self, keys: jax.Array) -> None:
         """Decode mutated these pages in place: flag them for write-back."""
-        self.tac = tac_jax.set_dirty(self.tac,
-                                     jnp.asarray(keys, jnp.int32), True)
+        keys = jnp.asarray(keys, jnp.int32)
+        if keys.shape[0] == 0:
+            return
+        self.tac = tac_jax.set_dirty(self.tac, keys, True)
 
     def flush_dirty(self) -> Tuple[np.ndarray, Dict[str, jax.Array]]:
         """Checkpoint/shutdown: return (keys, page contents) of every dirty

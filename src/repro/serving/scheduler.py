@@ -19,6 +19,13 @@ sync/async/prefetch comparison runs on the serving path too:
 
 Only requests whose pages are all resident are scheduled; everything else
 parks until ``poll``ed completions admit their pages.
+
+The scheduler is storage-topology-agnostic: ``arena``/``store`` can be one
+``PagedStateArena`` + ``TieredStore`` pair, or a ``ShardRouter``
+(serving/router.py) passed as BOTH — the router exposes the same batched
+interface over per-shard pairs, so hints route to owning shards and
+key-range migrations happen underneath without scheduler changes
+(DESIGN.md §9).
 """
 from __future__ import annotations
 

@@ -119,6 +119,35 @@ class TieredStore:
             out.append(blocks)
         return out, ready_until - now
 
+    # ------------------------------------------------------------- migration
+    def export_keys(self, pred) -> Dict[str, Any]:
+        """Key-range migration (DESIGN.md §9): pop every tier entry — host,
+        backing, host-dirty flag, and in-flight stage requests — whose key
+        satisfies ``pred`` (scalar predicate).  In-flight requests keep
+        their ready times: a page already being staged at the source keeps
+        overlapping I/O with compute at the destination."""
+        moved: Dict[str, Any] = {
+            "host": {k: self.host.data.pop(k)
+                     for k in [k for k in self.host.data if pred(k)]},
+            "backing": {k: self.backing.data.pop(k)
+                        for k in [k for k in self.backing.data if pred(k)]},
+            "in_flight": {k: self.in_flight.pop(k)
+                          for k in [k for k in self.in_flight if pred(k)]},
+        }
+        moved["dirty"] = {k for k in list(self._host_dirty) if pred(k)}
+        self._host_dirty -= moved["dirty"]
+        return moved
+
+    def import_keys(self, moved: Dict[str, Any]) -> int:
+        """Land a migration export in this store's tiers (bulk transfer,
+        off the request path; tier read/write counters track workload I/O,
+        so migration moves the dicts directly)."""
+        self.host.data.update(moved["host"])
+        self.backing.data.update(moved["backing"])
+        self.in_flight.update(moved["in_flight"])
+        self._host_dirty |= moved["dirty"]
+        return sum(len(moved[t]) for t in ("host", "backing", "in_flight"))
+
     # ------------------------------------------------------------ write-back
     def writeback(self, key: Any, blocks: Any) -> None:
         """Dirty victim evicted from the arena: lands in host DRAM, flushed

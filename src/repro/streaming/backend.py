@@ -71,3 +71,17 @@ class StateBackend:
         self.writes += 1
         self.bytes_written += size
         self.data[key] = value
+
+    # ------------------------------------------------------ shard migration
+    def export_keys(self, pred) -> Dict[Any, Any]:
+        """Migration handoff (DESIGN.md §9): pop every entry whose key
+        satisfies ``pred``.  The authoritative copy of a migrating shard
+        moves with it; the bulk transfer runs off the tuple path, so read/
+        write counters (workload I/O) are not charged."""
+        return {k: self.data.pop(k) for k in [k for k in self.data
+                                              if pred(k)]}
+
+    def import_keys(self, items: Dict[Any, Any]) -> int:
+        """Land a migration export in this backend's partition."""
+        self.data.update(items)
+        return len(items)

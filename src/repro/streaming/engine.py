@@ -23,6 +23,8 @@ from repro.core.tac import TimestampAwareCache
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
                                     Tuple_)
+from repro.streaming.shards import (MIGRATE_BANDWIDTH, MIGRATE_RTT,
+                                    ShardPlane, hash_partition)
 
 # calibrated engine constants (documented in DESIGN.md §8)
 NET_LATENCY = 150e-6              # per flushed buffer hop
@@ -59,7 +61,19 @@ class Sim:
 
 
 class Channel:
-    """src_op -> dst_op edge with per-(src,dst)-subtask network buffers."""
+    """One src_op -> dst_op edge with per-(src,dst)-subtask network buffers.
+
+    Implements the Flink-style network stack of DESIGN.md §2: records
+    accumulate in an 8 KiB buffer per subtask pair and flush on size or
+    timeout (constants in §8).  ``kind`` distinguishes the data edge from
+    the hint side channel (§3), which flushes on the much shorter
+    ``HINT_TIMEOUT`` because hints are tiny and latency-critical.  The
+    ``partition`` function picks the destination subtask per key — by
+    default ``hash_partition``, or a ``ShardPlane`` router when the
+    destination operator runs the sharded state plane (§9).  Control
+    messages (markers, barriers) broadcast and flush immediately so they
+    never reorder behind buffered records.
+    """
 
     def __init__(self, sim: Sim, dst_op: "Operator", kind: str,
                  partition: Callable[[Any, int], int],
@@ -111,12 +125,21 @@ class Channel:
         self.sim.after(delay, self.dst.deliver_batch, d, batch)
 
 
-def hash_partition(key: Any, n: int) -> int:
-    return hash(key) % n if key is not None else 0
+# hash_partition lives in repro.streaming.shards (one canonical definition
+# shared with the shard plane); re-exported here for existing callers.
 
 
 class Operator:
-    """Base operator: pulls one message at a time from its input queue."""
+    """Base dataflow operator (DESIGN.md §2).
+
+    Each of ``parallelism`` subtasks pulls ONE message at a time from its
+    input queue; ``handle`` returns the service time the discrete-event
+    clock charges before the subtask takes the next message, so queueing
+    delay emerges from the simulation rather than being modelled.  Parked
+    messages resume through the higher-priority ``ready`` queue.  ``emit``
+    fans out to every data edge, ``emit_hint`` to every hint side channel
+    (§3); each channel routes per key.
+    """
 
     def __init__(self, engine: "Engine", name: str, parallelism: int,
                  service_time: float = 2e-6):
@@ -283,8 +306,19 @@ class _IOReq:
 class StatefulOp(Operator):
     """Keyed stateful operator with pluggable cache policy and access mode.
 
-    modes: 'sync' (cache miss blocks), 'async' (miss parks the tuple, CPU
-    moves on), 'prefetch' (async + Keyed Prefetching hints feed the TAC).
+    Implements the paper's three access modes (DESIGN.md §2): ``sync`` (a
+    cache miss blocks the subtask for the full backend fetch), ``async``
+    (a miss parks the tuple and the CPU moves on), and ``prefetch`` (async
+    + Keyed Prefetching: upstream hints feed the TAC, §3).  Each subtask
+    owns a cache, a backend partition, and a PrefetchingManager; I/O runs
+    over ``io_workers`` bounded lanes (the state thread pool).
+
+    With ``shards`` set, the operator joins the sharded state plane (§9):
+    keyed messages are guarded by shard ownership — a message for a shard
+    this subtask no longer owns is forwarded one hop to the owner, and a
+    message for a shard whose state is still in transit parks until
+    ``migrate_shard``'s re-admission completes.  Prefetch hits are
+    additionally counted per shard.
     """
 
     def __init__(self, engine, name, parallelism, apply_fn,
@@ -293,8 +327,14 @@ class StatefulOp(Operator):
                  io_workers: int = 4, state_size: int = 200,
                  service_time: float = 3e-6, read_only: bool = False,
                  default_state=None, gamma: float = 0.003,
-                 dense_backend: bool = False):
+                 dense_backend: bool = False,
+                 shards: Optional[ShardPlane] = None):
         super().__init__(engine, name, parallelism, service_time)
+        if shards is not None and shards.n_owners != parallelism:
+            raise ValueError(f"ShardPlane has {shards.n_owners} owners for "
+                             f"parallelism {parallelism}")
+        self.shards = shards
+        self.shard_pending: Dict[int, List[Any]] = {}
         self.apply_fn = apply_fn           # (tup, state) -> (state', outputs)
         self.mode = mode
         self.state_size = state_size
@@ -328,6 +368,11 @@ class StatefulOp(Operator):
 
     # ------------------------------------------------------------- messages
     def handle(self, sub: int, msg: Any) -> Optional[float]:
+        if self.shards is not None and \
+                isinstance(msg, (Hint, Tuple_)) and msg.key is not None:
+            routed = self._shard_guard(sub, msg)
+            if routed is not None:
+                return routed
         if isinstance(msg, Marker):
             if msg.lookahead_id is not None:      # via hint channel
                 self.managers[sub].on_marker_hint(msg.marker_id,
@@ -358,6 +403,82 @@ class StatefulOp(Operator):
         self.processed += 1
         return self._on_data(sub, msg)
 
+    # ------------------------------------------------------- sharded plane
+    def _shard_guard(self, sub: int, msg: Any) -> Optional[float]:
+        """Ownership check for keyed messages on the sharded plane
+        (DESIGN.md §9).  Returns the service time when the message was
+        intercepted (forwarded or parked), None to process normally."""
+        plane = self.shards
+        shard = plane.shard_of(msg.key)
+        owner = plane.owner[shard]
+        if owner != sub:
+            # in flight across an ownership flip: one extra hop (Megaphone
+            # routes at the new owner; stale deliveries self-correct)
+            plane.misroutes += 1
+            self.sim.after(NET_LATENCY, self.deliver_batch, owner, [msg])
+            return 0.2e-6
+        if shard in plane.migrating:
+            # state still in transit: park until re-admission, then replay
+            plane.parked_in_migration += 1
+            self.shard_pending.setdefault(shard, []).append(msg)
+            return 0.2e-6
+        return None
+
+    def migrate_shard(self, shard: int, dst_sub: int) -> None:
+        """Key-range migration (DESIGN.md §9, à la Megaphone): flip
+        ownership (new traffic parks at ``dst_sub``), drain the source
+        subtask's cache entries and backend partition for the shard, model
+        the bulk state transfer, then re-admit at the destination with
+        preserved timestamps and replay everything parked."""
+        plane = self.shards
+        if plane is None:
+            raise RuntimeError(f"{self.name} has no ShardPlane")
+        if not 0 <= shard < plane.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        src = plane.owner[shard]
+        if src == dst_sub:
+            return
+        plane.begin_migration(shard, dst_sub)
+        in_shard = lambda k: plane.shard_of(k) == shard
+        entries = self.caches[src].export_entries(in_shard)
+        # parked tuples whose fetch is still in flight at the source move
+        # with the shard; their completions are dropped by the owner guard
+        # in _io_done (the destination refetches on replay if needed)
+        for key in [k for k in self.waiting[src] if in_shard(k)]:
+            self.shard_pending.setdefault(shard, []).extend(
+                self.waiting[src].pop(key))
+        # likewise tuples already resumed into the ready queue but not yet
+        # processed: they would otherwise run at the drained source
+        keep = deque()
+        for tup in self.ready[src]:
+            if in_shard(tup.key):
+                self.shard_pending.setdefault(shard, []).append(tup)
+            else:
+                keep.append(tup)
+        self.ready[src] = keep
+        # authoritative backend partition moves off the tuple path
+        self.backends[dst_sub].import_keys(
+            self.backends[src].export_keys(in_shard))
+        nbytes = sum(e.size for e in entries)
+        delay = MIGRATE_RTT + nbytes / MIGRATE_BANDWIDTH
+        self.sim.after(delay, self._finish_migration, shard, dst_sub,
+                       entries)
+
+    def _finish_migration(self, shard: int, dst_sub: int,
+                          entries: List[Any]) -> None:
+        cache = self.caches[dst_sub]
+        now = self.sim.t
+        for e in entries:
+            # TAC entries keep their timestamps (a prefetched entry whose
+            # hint ts lies in the future stays protected across the move);
+            # LRU/Clock entries carry none and re-enter at migration time
+            cache.insert(e.key, e.state, getattr(e, "ts", now),
+                         dirty=e.dirty, size=e.size)
+        self.shards.finish_migration(shard)
+        pending = self.shard_pending.pop(shard, [])
+        if pending:
+            self.deliver_batch(dst_sub, pending)
+
     def _on_hint(self, sub: int, h: Hint) -> float:
         mgr = self.managers[sub]
         if mgr.on_hint(h.key, h.ts, self.caches[sub]):
@@ -372,6 +493,9 @@ class StatefulOp(Operator):
         if state is not None:
             if self.mode == "prefetch":
                 self.managers[sub].prefetch_hits += 1
+                if self.shards is not None:
+                    self.shards.prefetch_hits[
+                        self.shards.shard_of(tup.key)] += 1
             return self._apply(sub, tup, state)
         # miss
         if self.mode == "prefetch" and not self.managers[sub].enabled:
@@ -427,8 +551,21 @@ class StatefulOp(Operator):
         cache = self.caches[sub]
         mgr = self.managers[sub]
         if req.kind == "write":
-            self.backends[sub].write(req.key, req.entry.state,
+            # a write-back in flight across a migration must land in the
+            # CURRENT owner's partition (the shard's backend entries moved
+            # at drain time and this lane still holds the latest state)
+            dst = sub if self.shards is None \
+                else self.shards.owner_of(req.key)
+            self.backends[dst].write(req.key, req.entry.state,
                                      self.state_size)
+        elif self.shards is not None and \
+                self.shards.owner_of(req.key) != sub:
+            # the shard migrated while this fetch was in flight: its cache
+            # entries and waiting tuples already moved, so the completion
+            # is dropped (the destination refetches on replay if needed)
+            mgr.hints.complete(req.key)
+            mgr.hints.discard(req.key)
+            self.in_flight[sub].discard(req.key)
         else:
             state, _ = self.backends[sub].fetch(req.key, self.state_size)
             hint_ts = mgr.hints.complete(req.key)
@@ -481,7 +618,13 @@ class StatefulOp(Operator):
         if self.ready[sub]:
             tup = self.ready[sub].popleft()
             self.busy[sub] = True
-            svc = self.handle_parked(sub, tup)
+            # resumed tuples bypass handle(), so the shard-ownership guard
+            # must run here too (the shard may have migrated in between)
+            svc = None
+            if self.shards is not None:
+                svc = self._shard_guard(sub, tup)
+            if svc is None:
+                svc = self.handle_parked(sub, tup)
             self.busy_time[sub] += svc
             self.sim.after(svc, self._finish, sub)
             return
@@ -504,6 +647,18 @@ class SinkOp(Operator):
 
 
 class Engine:
+    """Dataflow driver: plan assembly, clock, markers, metrics.
+
+    Owns the discrete-event clock (``Sim``), the operator plan, the
+    centralised PrefetchingController (DESIGN.md §3), checkpoint
+    coordination (§7), and the end-of-run metrics rollup — including the
+    per-shard routing/migration counters of any operator on the sharded
+    state plane (§9).  ``connect`` wires channels (data or hint side
+    channel), ``register_prefetching`` declares the candidate lookaheads
+    for one stateful operator, and ``run`` drives sources + periodic
+    markers until the requested duration has elapsed.
+    """
+
     def __init__(self, marker_interval: float = 0.100):
         self.sim = Sim()
         self.controller = PrefetchingController(marker_interval)
@@ -511,6 +666,7 @@ class Engine:
         self._candidate_ops: Dict[str, List[str]] = {}
         self.order: List[str] = []
         self.latencies: List[float] = []
+        self.latency_t: List[float] = []      # sink time per latency sample
         self.latency_cap = 2_000_000
         self._marker_ids = itertools.count()
         self.marker_interval = marker_interval
@@ -537,13 +693,32 @@ class Engine:
     def register_prefetching(self, stateful: StatefulOp,
                              lookaheads: List[MapOp]) -> None:
         """Declare candidate lookaheads (ordered source -> closest) and wire
-        the hint side channels."""
+        the hint side channels.  On the sharded plane the hint channels
+        partition by shard OWNERSHIP (DESIGN.md §9): each hint reaches
+        exactly the subtask whose prefetcher owns the key."""
         cands = [LookaheadCandidate(op.name, op.plan_pos)
                  for op in lookaheads]
         self.controller.register(stateful.name, cands)
         self._candidate_ops[stateful.name] = [op.name for op in lookaheads]
+        plane = getattr(stateful, "shards", None)
+        hint_partition = plane.route_hint if plane is not None \
+            else hash_partition
         for op in lookaheads:
-            self.connect(op, stateful, kind="hint", timeout=HINT_TIMEOUT)
+            self.connect(op, stateful, partition=hint_partition,
+                         kind="hint", timeout=HINT_TIMEOUT)
+
+    def migrate_shard(self, op_name: str, shard: int, dst_sub: int,
+                      at: Optional[float] = None) -> None:
+        """Schedule (or run now) a key-range migration on a sharded
+        stateful operator — the rebalance entry point for benchmarks and
+        an elasticity controller."""
+        op = self.operators[op_name]
+        if not isinstance(op, StatefulOp):
+            raise TypeError(f"{op_name} is not a StatefulOp")
+        if at is None:
+            op.migrate_shard(shard, dst_sub)
+        else:
+            self.sim.at(at, op.migrate_shard, shard, dst_sub)
 
     def set_lookahead(self, stateful_name: str, lookahead_name: str) -> None:
         for name in self._candidate_ops.get(stateful_name, []):
@@ -560,6 +735,7 @@ class Engine:
     def record_latency(self, now: float, tup: Tuple_) -> None:
         if len(self.latencies) < self.latency_cap:
             self.latencies.append(now - tup.ingest_t)
+            self.latency_t.append(now)
 
     def trigger_checkpoint(self, checkpoint_id: int) -> None:
         b = CheckpointBarrier(checkpoint_id)
@@ -596,6 +772,7 @@ class Engine:
         if warmup > 0:
             self.sim.run_until(warmup)
             self.latencies.clear()
+            self.latency_t.clear()
         self.sim.run_until(warmup + duration)
         return self.metrics(duration, warmup)
 
@@ -647,4 +824,8 @@ class Engine:
                     m.prefetch_hits for m in op.managers)
                 out[f"{name}_hints_received"] = sum(
                     m.hints_received for m in op.managers)
+                if op.shards is not None:
+                    # per-shard routed-plane counters (DESIGN.md §9), not
+                    # just the global totals above
+                    out[f"{name}_shard_plane"] = op.shards.snapshot()
         return out

@@ -5,9 +5,17 @@ rolling window, the hottest auction/bidder rotating every second.
 Queries (Fig 5): Q13 enrichment join, Q18 top-1 bid per (auction,bidder),
 Q19 top-10 bids per auction, Q20 auction-bid incremental join with a
 category filter.  All runs are scaled in state size, not in behaviour.
+
+For the sharded-plane benchmark (DESIGN.md §9, benchmarks/sharding.py) the
+classic NEXMark Q3 and Q4 are added in simplified stateful form: Q3 joins
+sellers' person profiles with their auctions (keyed by seller, emitting
+only "local" sellers), Q4 tracks the max bid and category per auction
+(keyed by auction).  Both exercise a different key population than the
+bid-dominated Q13/Q18-Q20 — person/seller keys churn far more slowly.
 """
 from __future__ import annotations
 
+import itertools
 import random
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
@@ -89,11 +97,14 @@ class NexmarkGen:
         if r < 0.98:
             lo, hi = self.active_range(now, self.cfg.auctions_per_s)
             aid = hi                          # a new auction opens
-            cat = 10 if self.rng.random() < 0.25 else 0
-            return (aid, {"type": AUCTION, "auction": aid, "category": cat},
-                    SIZES[AUCTION])
+            cat = 10 if self.rng.random() < 0.25 else self.rng.randrange(10)
+            plo, phi = self.active_range(now, max(0.02 * self.cfg.rate, 1.0))
+            seller = self.rng.randint(plo, max(plo, phi - 1))
+            return (aid, {"type": AUCTION, "auction": aid, "category": cat,
+                          "seller": seller}, SIZES[AUCTION])
         lo, hi = self.active_range(now, max(0.02 * self.cfg.rate, 1.0))
-        return (hi, {"type": PERSON, "person": hi}, SIZES[PERSON])
+        return (hi, {"type": PERSON, "person": hi,
+                     "state": self.rng.randrange(50)}, SIZES[PERSON])
 
 
 # --------------------------------------------------------------------- plans
@@ -110,12 +121,65 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 backend: BackendModel = LOCAL_NVME,
                 parallelism: int = 3, source_parallelism: int = 2,
                 io_workers: int = 4,
-                cms_conf: Optional[dict] = None) -> Engine:
-    """policy: lru|clock|tac; mode: sync|async|prefetch."""
+                cms_conf: Optional[dict] = None,
+                n_shards: Optional[int] = None,
+                buffer_timeout: Optional[float] = None) -> Engine:
+    """policy: lru|clock|tac; mode: sync|async|prefetch.
+
+    With ``n_shards`` the stateful operator runs the sharded state plane
+    (DESIGN.md §9): data and hint channels route by shard ownership and
+    ``Engine.migrate_shard`` can rebalance mid-run.  ``buffer_timeout``
+    overrides the data channels' flush timeout (Flink's low-latency gear,
+    e.g. 2 ms, keeps the latency floor from masking state-access effects
+    in latency-focused benchmarks)."""
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
 
-    if query == "q13":
+    if query == "q3":
+        # classic NEXMark Q3 (simplified): person profiles keyed by person
+        # id; each auction probes its SELLER's profile and joins when the
+        # seller is "local" (state < 10, ~20% selectivity)
+        want = {AUCTION, PERSON}
+        key_field = "seller"                  # auctions rekey to the seller
+        state_size = 300
+
+        def apply_fn(tup, state):
+            state = dict(state or {})
+            p = tup.payload
+            if p["type"] == PERSON:
+                state["profile"] = p
+                return state, []
+            prof = state.get("profile")
+            if prof is not None and prof["state"] < 10:
+                return state, [Tuple_(tup.ts, tup.key, (p, prof), 300,
+                                      tup.ingest_t)]
+            return state, []
+        read_only = False
+        default_state = lambda k: {}
+    elif query == "q4":
+        # classic NEXMark Q4 (simplified): per-auction running max bid +
+        # category (the per-category average is a cheap downstream fold;
+        # the keyed-state pressure is all here)
+        want = {BID, AUCTION}
+        key_field = "auction"
+        state_size = 240
+
+        def apply_fn(tup, state):
+            state = dict(state or {})
+            p = tup.payload
+            if p["type"] == AUCTION:
+                state["category"] = p["category"]
+                return state, []
+            if p["price"] > state.get("max", 0):
+                state["max"] = p["price"]
+                cat = state.get("category", 0)
+                return state, [Tuple_(tup.ts, tup.key,
+                                      (cat, state["max"]), 200,
+                                      tup.ingest_t)]
+            return state, []
+        read_only = False
+        default_state = lambda k: {}
+    elif query == "q13":
         want = {BID}
         key_field = "auction"
         state_size = 500
@@ -190,6 +254,8 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
             return None
         if query == "q20" and p["type"] == AUCTION:
             return None                   # auctions are filtered/small side
+        if query == "q3" and p["type"] == PERSON:
+            return p["person"]            # profile side keys by person id
         if isinstance(key_field, tuple):
             return (p[key_field[0]], p[key_field[1]])
         return p[key_field]
@@ -208,17 +274,31 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     norm = eng.add(MapOp(eng, "normalize", parallelism, fn=rekey,
                          service_time=10e-6, key_of=key_of,
                          cms_conf=cms_conf))
+    plane = None
+    if n_shards is not None:
+        from repro.streaming.shards import ShardPlane
+        plane = ShardPlane(n_shards, parallelism)
     stateful = eng.add(StatefulOp(
         eng, "stateful", parallelism, apply_fn, backend, cache_entries
         * state_size, policy=policy, mode=mode, io_workers=io_workers,
         state_size=state_size, read_only=read_only,
-        default_state=default_state, dense_backend=(query == "q13")))
+        default_state=default_state, dense_backend=(query == "q13"),
+        shards=plane))
     sink = eng.add(SinkOp(eng, "sink", 1))
 
-    eng.connect(src, parse, partition=lambda k, n: hash(k) % n)
-    eng.connect(parse, norm)
-    eng.connect(norm, stateful)
-    eng.connect(stateful, sink, partition=lambda k, n: 0)
+    from repro.streaming.engine import BUFFER_TIMEOUT
+    to = BUFFER_TIMEOUT if buffer_timeout is None else buffer_timeout
+    # source -> parse is a STATELESS edge: rebalance round-robin (Flink's
+    # default for non-keyed exchanges).  Hash-partitioning here would pin
+    # the hot auction's ~50% of events to one parse subtask and cap the
+    # whole pipeline at that subtask's service rate
+    rr = itertools.count()
+    eng.connect(src, parse, partition=lambda k, n: next(rr) % n, timeout=to)
+    eng.connect(parse, norm, timeout=to)
+    eng.connect(norm, stateful,
+                partition=plane.route_data if plane else hash_partition,
+                timeout=to)
+    eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
         eng.register_prefetching(stateful, [parse, norm])
     return eng

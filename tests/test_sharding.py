@@ -1,0 +1,311 @@
+"""Tests for the sharded keyed-state plane (DESIGN.md §9).
+
+Covers the ISSUE 2 satellite checklist: ``hash_partition`` edge cases,
+hint routing on the shard plane (rekeyed tuples, empty batches, a hint
+arriving at a shard mid-migration), the serving ``ShardRouter``'s
+key-range migration (timestamps, dirty bits, and page contents preserved),
+the ``tac_jax`` migration export/import primitives, and the per-shard
+counters surfaced by ``Engine.metrics``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tac_jax
+from repro.serving import PagedStateArena, ShardRouter, TieredStore
+from repro.streaming.backend import IN_MEMORY, LOCAL_NVME, StateBackend
+from repro.streaming.engine import (Engine, SinkOp, StatefulOp,
+                                    hash_partition)
+from repro.streaming.events import Hint, Tuple_
+from repro.streaming.shards import ShardPlane
+
+
+# --------------------------------------------------------- hash_partition
+def test_hash_partition_edge_cases():
+    assert hash_partition(None, 7) == 0          # keyless control traffic
+    assert hash_partition(0, 1) == 0             # single shard swallows all
+    for key in (0, 1, 41, -3, (7, 11), "session"):
+        p = hash_partition(key, 4)
+        assert 0 <= p < 4
+        assert p == hash_partition(key, 4)       # deterministic
+    # small non-negative ints partition as key % n (hash(i) == i), which is
+    # what keeps host routing and the device-side tac_jax.shard_of aligned
+    for key in range(32):
+        assert hash_partition(key, 5) == key % 5
+    dev = np.asarray(tac_jax.shard_of(jnp.arange(32, dtype=jnp.int32), 5))
+    assert dev.tolist() == [k % 5 for k in range(32)]
+
+
+def test_shard_plane_validation():
+    with pytest.raises(ValueError):
+        ShardPlane(2, 4)                          # fewer shards than owners
+    with pytest.raises(ValueError):
+        ShardPlane(4, 2, owners=[0, 1, 2, 1])     # owner out of range
+    plane = ShardPlane(8, 2)
+    assert plane.owner == [0, 1] * 4
+    assert plane.owner_of(5) == plane.owner[5 % 8]
+
+
+# ------------------------------------------------- engine plane + routing
+def _mini_sharded_op(mode="prefetch", policy="tac", n_shards=4,
+                     parallelism=2):
+    """Two-subtask stateful op on a shard plane, driven directly (no
+    sources): deliver_batch + sim.run_until."""
+    eng = Engine(marker_interval=10.0)            # markers out of the way
+    plane = ShardPlane(n_shards, parallelism)
+
+    def apply_fn(tup, state):
+        state = (state or 0) + 1
+        return state, [Tuple_(tup.ts, tup.key, state, 64, tup.ingest_t)]
+
+    op = eng.add(StatefulOp(eng, "stateful", parallelism, apply_fn,
+                            LOCAL_NVME, cache_capacity=64 * 200,
+                            policy=policy, mode=mode, io_workers=2,
+                            default_state=lambda k: 0, shards=plane))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+    eng.connect(op, sink, partition=lambda k, n: 0)
+    return eng, op, plane
+
+
+def test_rekeyed_tuple_routes_to_owner_and_forwards_on_misroute():
+    """A tuple delivered to the wrong subtask (stale routing during an
+    ownership flip) is forwarded one hop to the owner and processed there,
+    not dropped or applied against the wrong shard's cache."""
+    eng, op, plane = _mini_sharded_op(mode="sync", policy="lru")
+    key = 2                                       # shard 2 -> owner 0
+    wrong = 1 - plane.owner_of(key)
+    op.deliver_batch(wrong, [Tuple_(0.0, key, None, 64, 0.0)])
+    eng.sim.run_until(0.1)
+    assert plane.misroutes == 1
+    assert op.processed == 1
+    assert op.caches[plane.owner_of(key)].contains(key)
+    assert not op.caches[wrong].contains(key)
+
+
+def test_empty_batches_and_plane_counters():
+    """Empty deliveries are harmless, and the routers count per shard."""
+    eng, op, plane = _mini_sharded_op(mode="sync", policy="lru")
+    op.deliver_batch(0, [])                       # empty batch: no-op
+    eng.sim.run_until(0.01)
+    assert op.processed == 0
+    for key in (0, 1, 2, 3, 4):
+        sub = plane.route_data(key, op.parallelism)
+        op.deliver_batch(sub, [Tuple_(0.0, key, None, 64, 0.0)])
+    eng.sim.run_until(0.2)
+    assert op.processed == 5
+    assert plane.tuples_routed == [2, 1, 1, 1]    # shard 0 got keys 0 and 4
+    m = eng.metrics(duration=0.2, warmup=0.0)
+    sp = m["stateful_shard_plane"]
+    assert sp["tuples_routed"] == [2, 1, 1, 1]
+    assert sp["owner"] == plane.owner
+
+
+def test_hint_mid_migration_parks_and_replays():
+    """ISSUE satellite: a hint arriving for a shard whose state is still in
+    transit parks at the new owner and is replayed after re-admission — it
+    still triggers a prefetch instead of being lost or applied at the old
+    owner."""
+    eng, op, plane = _mini_sharded_op(mode="prefetch", policy="tac")
+    key = 0                                       # shard 0 -> owner 0
+    # warm the key on subtask 0 so the migration has state to move
+    op.deliver_batch(0, [Tuple_(0.0, key, None, 64, 0.0)])
+    eng.sim.run_until(0.05)
+    assert op.caches[0].contains(key)
+    op.migrate_shard(0, 1)                        # state now in transit
+    assert plane.owner[0] == 1 and 0 in plane.migrating
+    assert not op.caches[0].contains(key)         # drained from the source
+    # hint and tuple race in during the transfer: both arrive at the new
+    # owner (routing already flipped) and must park
+    hint = Hint(key, ts=1.0, origin="udf")
+    op.deliver_batch(plane.owner_of(key), [hint])
+    op.deliver_batch(plane.route_data(key, 2),
+                     [Tuple_(0.1, key, None, 64, 0.1)])
+    eng.sim.run_until(eng.sim.t + 1e-5)           # < transfer delay
+    assert plane.parked_in_migration == 2
+    assert op.managers[1].hints_received == 0     # not processed yet
+    eng.sim.run_until(eng.sim.t + 0.1)            # transfer completes
+    assert 0 not in plane.migrating
+    assert plane.migrations == 1
+    assert op.managers[1].hints_received == 1     # replayed at the dst
+    assert op.caches[1].contains(key)             # migrated state landed
+    assert op.processed >= 2
+
+
+def test_migration_preserves_entry_timestamps_and_dirty():
+    """TAC entries keep their (possibly future/hint) timestamps across a
+    migration, so prefetched-but-unused state stays protected."""
+    eng, op, plane = _mini_sharded_op(mode="sync", policy="tac")
+    cache = op.caches[0]
+    cache.insert(0, "hot", ts=123.0, dirty=True, size=200)
+    op.backends[0].write(0, "hot", 200)
+    op.migrate_shard(0, 1)
+    eng.sim.run_until(eng.sim.t + 0.1)
+    e = op.caches[1].entries[0]
+    assert e.ts == 123.0 and e.dirty
+    assert op.backends[1].data[0] == "hot"        # partition moved
+    assert 0 not in op.backends[0].data
+
+
+def test_inflight_writeback_lands_at_new_owner():
+    """A dirty write-back already in an IO lane when its shard migrates
+    must land in the NEW owner's backend partition (the shard's entries
+    moved at drain time; writing to the source would strand the update)."""
+    from repro.core.tac import Entry
+    from repro.streaming.engine import _IOReq
+    eng, op, plane = _mini_sharded_op(mode="sync", policy="tac")
+    e = Entry(0, "latest", 1.0, dirty=True, size=200)
+    op._io_enqueue(0, _IOReq("write", 0, entry=e))   # lane issued at src
+    op.migrate_shard(0, 1)                           # flips before it lands
+    eng.sim.run_until(eng.sim.t + 0.1)
+    assert op.backends[1].data.get(0) == "latest"
+    assert 0 not in op.backends[0].data
+
+
+def test_ready_tuples_relocate_with_migrating_shard():
+    """A tuple resumed into the ready queue but not yet processed moves
+    with its shard instead of running against the drained source."""
+    eng, op, plane = _mini_sharded_op(mode="async", policy="tac")
+    op.ready[0].append(Tuple_(0.0, 0, None, 64, 0.0))
+    op.migrate_shard(0, 1)
+    assert not op.ready[0]                           # relocated, not run
+    eng.sim.run_until(eng.sim.t + 0.2)
+    assert op.processed == 1
+    assert op.caches[1].contains(0)
+    assert not op.caches[0].contains(0)
+
+
+# ------------------------------------------------------- tac_jax primitives
+def test_tac_jax_export_import_roundtrip():
+    state = tac_jax.init(4, 2, 2)
+    keys = jnp.asarray([3, 8, 13, 6], jnp.int32)
+    ts = jnp.asarray([5.0, 6.0, 7.0, 8.0])
+    vals = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+    dirty = jnp.asarray([True, False, True, False])
+    state = tac_jax.admit_batch(state, keys, ts, vals, dirty).state
+    resident = np.asarray(state.keys)
+    odd = set(int(k) for k in resident[resident >= 0] if k % 2 == 1)
+    exp = tac_jax.export_mask(state, np.asarray(state.keys) % 2 == 1)
+    assert set(exp.keys.tolist()) == odd
+    left = np.asarray(exp.state.keys)
+    assert not (left[left >= 0] % 2 == 1).any()   # drained from the source
+    res = tac_jax.import_entries(tac_jax.init(4, 2, 2), exp.keys, exp.ts,
+                                 exp.vals, exp.dirty)
+    back = np.asarray(res.state.keys)
+    assert set(back[back >= 0].tolist()) == odd
+    # timestamps and dirty bits preserved
+    for i, k in enumerate(exp.keys):
+        b, w = np.nonzero(back == k)
+        assert np.asarray(res.state.ts)[b[0], w[0]] == exp.ts[i]
+        assert np.asarray(res.state.dirty)[b[0], w[0]] == exp.dirty[i]
+
+
+def test_tac_jax_owned_wrappers_drop_foreign_keys():
+    state = tac_jax.init(4, 2, 1)
+    res, dropped = tac_jax.admit_owned(
+        state, jnp.asarray([0, 1, 2, 3], jnp.int32),
+        jnp.asarray([1.0, 2.0, 3.0, 4.0]), shard_id=0, n_shards=2)
+    assert dropped == 2
+    resident = np.asarray(res.state.keys)
+    assert set(resident[resident >= 0].tolist()) == {0, 2}
+    _, hit, owned = tac_jax.probe_owned(res.state,
+                                        jnp.asarray([0, 1, 2], jnp.int32),
+                                        shard_id=0, n_shards=2)
+    assert np.asarray(hit).tolist() == [True, False, True]
+    assert np.asarray(owned).tolist() == [True, False, True]
+    # empty owned subset is fine
+    res2, d2 = tac_jax.admit_owned(state, jnp.asarray([1, 3], jnp.int32),
+                                   jnp.asarray([1.0, 2.0]),
+                                   shard_id=0, n_shards=2)
+    assert d2 == 2 and np.asarray(res2.slots).shape == (0,)
+
+
+# ----------------------------------------------------------- serving router
+def _router(n_shards=2, n_bins=8):
+    mk_arena = lambda s: PagedStateArena(4, 2, {"kv": ((2, 4), np.float32)})
+    mk_store = lambda s: TieredStore(backing_model=IN_MEMORY,
+                                    page_bytes=256, workers=2)
+    return ShardRouter(n_shards, mk_arena, mk_store, n_bins=n_bins)
+
+
+def test_router_empty_batches():
+    r = _router()
+    hit, slots = r.probe(np.zeros((0,), np.int32))
+    assert hit.shape == (0,) and slots.shape == (0,)
+    adm = r.admit(np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+    assert adm.slots.shape == (0,)
+    r.stage(adm.slots, {})
+    r.renew(np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+    r.mark_dirty(np.zeros((0,), np.int32))
+    assert r.request_stage([], now=0.0) == 0
+    keys, blocks = r.flush_dirty()
+    assert keys.shape == (0,) and blocks == {}
+
+
+def test_router_routes_and_globalizes_slots():
+    r = _router()
+    keys = np.asarray([0, 1, 2, 3], np.int32)     # bins 0..3 -> shards 0101
+    adm = r.admit(keys, np.asarray([1.0, 2.0, 3.0, 4.0], np.float32))
+    r.stage(adm.slots, {"kv": np.stack([np.full((2, 4), float(k))
+                                        for k in keys])})
+    hit, slots = r.probe(keys)
+    assert hit.all()
+    assert (slots == adm.slots).all()
+    shards = slots // r.slots_per_shard
+    assert shards.tolist() == [0, 1, 0, 1]
+    # per-shard arenas saw only their own keys
+    a0 = np.asarray(r.arenas[0].tac.keys)
+    assert set(a0[a0 >= 0].tolist()) == {0, 2}
+
+
+def test_router_migration_preserves_pages_ts_dirty():
+    r = _router()
+    keys = np.asarray([0, 2, 4], np.int32)        # all bins owned by shard 0
+    ts = np.asarray([10.0, 20.0, 30.0], np.float32)
+    adm = r.admit(keys, ts, dirty=np.asarray([True, False, True]))
+    r.stage(adm.slots, {"kv": np.stack([np.full((2, 4), float(k))
+                                        for k in keys])})
+    r.stores[0].seed(2, {"kv": np.zeros((2, 4), np.float32)})
+    stats = r.migrate_bins([0, 2, 4], dst=1)
+    assert stats["pages"] == 3 and stats["sources"] == 1
+    assert (r.shard_of(keys) == 1).all()          # ownership flipped
+    hit, slots = r.probe(keys, count=False)
+    assert hit.all() and (slots // r.slots_per_shard == 1).all()
+    # page contents crossed intact
+    local = slots - r.slots_per_shard
+    blk = np.asarray(r.arenas[1].gather(local)["kv"])
+    for i, k in enumerate(keys):
+        assert np.allclose(blk[i], float(k))
+    # timestamps + dirty preserved in the destination TAC
+    dk = np.asarray(r.arenas[1].tac.keys)
+    for k, t, d in zip(keys, ts, [True, False, True]):
+        b, w = np.nonzero(dk == k)
+        assert np.asarray(r.arenas[1].tac.ts)[b[0], w[0]] == t
+        assert bool(np.asarray(r.arenas[1].tac.dirty)[b[0], w[0]]) == d
+    # tier contents moved with the shard
+    assert 2 in r.stores[1].backing.data and 2 not in r.stores[0].backing.data
+    # the old owner no longer holds the pages
+    a0 = np.asarray(r.arenas[0].tac.keys)
+    assert (a0 < 0).all()
+
+
+def test_router_hint_routing_not_broadcast():
+    """request_stage sends each key only to its owning shard's store."""
+    r = _router()
+    n = r.request_stage([0, 1, 2, 5], now=0.0, hint_ts=[1.0, 1.0, 1.0, 1.0])
+    assert n == 4
+    assert set(r.stores[0].in_flight) == {0, 2}
+    assert set(r.stores[1].in_flight) == {1, 5}
+    assert r.hints_routed.tolist() == [2, 2]
+    done = r.poll(now=10.0)
+    assert {k for k, _, _ in done} == {0, 1, 2, 5}
+
+
+def test_backend_export_import_partition_handoff():
+    src, dst = StateBackend(IN_MEMORY), StateBackend(IN_MEMORY)
+    for k in range(6):
+        src.write(k, f"v{k}", 64)
+    moved = src.export_keys(lambda k: k % 2 == 0)
+    writes_before = dst.writes
+    assert dst.import_keys(moved) == 3
+    assert set(src.data) == {1, 3, 5} and set(dst.data) == {0, 2, 4}
+    assert dst.writes == writes_before            # handoff is not workload IO

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Docs consistency check (the CI docs job).
+
+Fails when:
+  * a relative markdown link in any root-level ``*.md`` points at a file
+    that does not exist;
+  * ``README.md`` references a ``BENCH_*.json`` artifact that is not
+    checked in at the repo root;
+  * ``README.md`` references a module path (``repro.x.y``) or a
+    repo-relative file path in backticks that does not exist.
+
+Stdlib only — runs anywhere Python does:  ``python tools/check_docs.py``
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BENCH_RE = re.compile(r"BENCH_\w+\.json")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+MODULE_RE = re.compile(r"repro(?:\.\w+)+")
+# a backticked token is treated as a repo path only when it looks like one
+PATH_RE = re.compile(r"[\w.-]+(?:/[\w.-]+)+/?|[\w-]+\.(?:py|md|json|ini|"
+                     r"toml|txt|yml|yaml)")
+
+
+def path_exists(rel: str) -> bool:
+    rel = rel.rstrip("/")
+    return any((base / rel).exists()
+               for base in (ROOT, ROOT / "src", ROOT / "src" / "repro"))
+
+
+def module_exists(dotted: str) -> bool:
+    stem = ROOT / "src" / Path(*dotted.split("."))
+    return stem.is_dir() or stem.with_suffix(".py").exists()
+
+
+def check_links(md: Path, fails: list) -> None:
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if rel and not (md.parent / rel).exists():
+            fails.append(f"{md.name}: broken link -> {target}")
+
+
+def check_readme(readme: Path, fails: list) -> None:
+    text = readme.read_text()
+    for bench in sorted(set(BENCH_RE.findall(text))):
+        if not (ROOT / bench).exists():
+            fails.append(f"README.md: references {bench}, which does not "
+                         f"exist (regenerate it or drop the reference)")
+    for code in sorted(set(CODE_RE.findall(text))):
+        for dotted in MODULE_RE.findall(code):
+            if not module_exists(dotted):
+                fails.append(f"README.md: module `{dotted}` not found "
+                             f"under src/")
+        if MODULE_RE.fullmatch(code):
+            continue
+        m = PATH_RE.fullmatch(code)
+        if m and "//" not in code and not path_exists(code):
+            fails.append(f"README.md: path `{code}` does not exist")
+
+
+def main() -> int:
+    fails: list = []
+    md_files = sorted(ROOT.glob("*.md"))
+    if not any(md.name == "README.md" for md in md_files):
+        fails.append("README.md is missing")
+    for md in md_files:
+        check_links(md, fails)
+    readme = ROOT / "README.md"
+    if readme.exists():
+        check_readme(readme, fails)
+    if fails:
+        print("docs check FAILED:")
+        for f in fails:
+            print(f"  - {f}")
+        return 1
+    print(f"docs check OK ({len(md_files)} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
