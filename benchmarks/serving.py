@@ -27,8 +27,20 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=500.0)
     ap.add_argument("--decode-tokens", type=int, default=3)
     ap.add_argument("--modes", default="sync,async,prefetch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-scale CI config (fewer requests/"
+                         "sessions, sync+prefetch only) for the "
+                         "bench-smoke perf gate (tools/bench_gate.py)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 16)
+        args.sessions = min(args.sessions, 8)
+        args.cache_sessions = min(args.cache_sessions, 4)
+        args.decode_tokens = min(args.decode_tokens, 2)
+        if args.modes == "sync,async,prefetch":
+            args.modes = "sync,prefetch"
 
     from repro.launch.serve import ServeConfig, run_serving
 
@@ -37,7 +49,8 @@ def main() -> None:
                       cache_sessions=args.cache_sessions,
                       decode_tokens=args.decode_tokens,
                       arrival_rate=args.rate)
-    result = {"config": {"arch": cfg.arch, "n_requests": cfg.n_requests,
+    result = {"config": {"smoke": args.smoke,
+                         "arch": cfg.arch, "n_requests": cfg.n_requests,
                          "n_sessions": cfg.n_sessions,
                          "cache_sessions": cfg.cache_sessions,
                          "arrival_rate": cfg.arrival_rate,

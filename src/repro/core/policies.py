@@ -75,6 +75,17 @@ class _BaseCache:
     def _iter_entries(self):
         raise NotImplementedError
 
+    def drop(self, key) -> bool:
+        """Remove an entry outright (window purge, DESIGN.md §10): no
+        write-back, no eviction accounting."""
+        e = self.entries.pop(key, None)
+        if e is not None:
+            self.used -= e.size
+            if hasattr(self, "_hand"):
+                self._hand = []           # clock hand invalidated by removal
+            return True
+        return self.evict_buffer.pop(key, None) is not None
+
     # TAC-compat no-ops
     def renew(self, key, hint_ts) -> bool:
         return self.contains(key)

@@ -117,6 +117,7 @@ class PrefetchingManager:
         self._marker_hint_t: Dict[Tuple[int, str], float] = {}
         self.enabled = False
         self.hints_received = 0
+        self.hints_late = 0
         self.prefetch_hits = 0
 
     # ------------------------------------------------------------ activation
@@ -128,20 +129,31 @@ class PrefetchingManager:
         return self.controller.active.get(self.op_id)
 
     # ----------------------------------------------------------------- hints
-    def on_hint(self, key: Any, ts: float, cache,
+    def on_hint(self, key: Any, access_ts: float, cache,
                 watermark: Optional[float] = None,
                 lateness: float = 0.0) -> bool:
-        """Returns True if a fetch should be scheduled for this key."""
+        """Returns True if a fetch should be scheduled for this key.
+
+        ``access_ts`` is the PREDICTED ACCESS TIMESTAMP of ``key`` in the
+        clock domain the consumer's cache orders by — event time on the
+        streaming engine (tuple event ts, or the window-fire deadline for
+        windowed hints), predicted processing time on the serving
+        scheduler.  See ``repro.streaming.events.Hint``.  With an event-
+        time ``watermark``, hints whose access time already fell behind
+        ``watermark - lateness`` target state the operator will drop or
+        has purged, so no fetch is scheduled.
+        """
         self.hints_received += 1
-        if watermark is not None and ts < watermark - lateness:
+        if watermark is not None and access_ts < watermark - lateness:
+            self.hints_late += 1
             return False                      # late record: will be dropped
         if cache.contains(key):
-            cache.renew(key, ts)
+            cache.renew(key, access_ts)
             return False
         if self.hints.pending(key):
-            self.hints.add(key, ts)
+            self.hints.add(key, access_ts)
             return False
-        self.hints.add(key, ts)
+        self.hints.add(key, access_ts)
         return True
 
     # --------------------------------------------------------------- markers

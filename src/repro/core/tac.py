@@ -36,12 +36,31 @@ class Entry:
 
 class TimestampAwareCache:
     def __init__(self, capacity: int,
-                 on_writeback: Optional[Callable[[Any, Any], None]] = None):
-        """capacity counts entry ``size`` units (bytes or slots)."""
+                 on_writeback: Optional[Callable[[Any, Any], None]] = None,
+                 deadline_aware: bool = False):
+        """capacity counts entry ``size`` units (bytes or slots).
+
+        ``deadline_aware`` changes the eviction ORDER for workloads whose
+        timestamps are far-future access DEADLINES (window panes,
+        DESIGN.md §10): stale entries (ts behind the clock of observed
+        accesses) still evict oldest-first, but among future-deadline
+        entries the FARTHEST deadline goes first — Belady's rule on known
+        access times.  The paper's min-ts order (default) is right when
+        hints run only milliseconds ahead; with deadlines seconds ahead
+        it would evict exactly the panes that fire next.
+        """
         self.capacity = capacity
         self.entries: Dict[Any, Entry] = {}
         self.evict_buffer: Dict[Any, Entry] = {}
         self._heap: List[Tuple[float, int, Any]] = []   # (ts, gen, key) lazy
+        self.deadline_aware = deadline_aware
+        self._fheap: List[Tuple[float, int, Any]] = []  # (-ts, gen, key)
+        # staleness boundary for deadline_aware eviction: the owner's
+        # event-time WATERMARK (set_clock) — an entry whose deadline lies
+        # behind it can no longer be accessed by an on-time fire.  Using
+        # anything faster (e.g. max observed event ts) would misclassify
+        # windows awaiting fire as stale during the watermark lag.
+        self.clock = float("-inf")
         self._gen = 0
         self.used = 0
         self.on_writeback = on_writeback
@@ -60,23 +79,50 @@ class TimestampAwareCache:
     def _push(self, e: Entry) -> None:
         self._gen += 1
         heapq.heappush(self._heap, (e.ts, self._gen, e.key))
+        if self.deadline_aware:
+            heapq.heappush(self._fheap, (-e.ts, self._gen, e.key))
+
+    def _remove_victim(self, e: Entry) -> None:
+        del self.entries[e.key]
+        self.used -= e.size
+        self.evictions += 1
+        if getattr(e, "prefetched_unused", False):
+            self.prefetch_unused_evicted += 1
+            org = getattr(e, "origin", "")
+            self.pf_unused_by_origin[org] = \
+                self.pf_unused_by_origin.get(org, 0) + 1
+        if e.dirty:
+            self.evict_buffer[e.key] = e                   # async write-back
 
     def _evict_one(self) -> None:
+        if self.deadline_aware:
+            # stale first (oldest observed-access ts), skipping lazy
+            # records; stop at the first entry whose ts is a live deadline
+            while self._heap:
+                ts, _, key = self._heap[0]
+                e = self.entries.get(key)
+                if e is None or e.ts != ts:
+                    heapq.heappop(self._heap)
+                    continue
+                if ts >= self.clock:
+                    break                   # only future deadlines remain
+                heapq.heappop(self._heap)
+                self._remove_victim(e)
+                return
+            # all live: farthest deadline goes first (Belady on deadlines)
+            while self._fheap:
+                nts, _, key = heapq.heappop(self._fheap)
+                e = self.entries.get(key)
+                if e is None or e.ts != -nts:
+                    continue
+                self._remove_victim(e)
+                return
         while self._heap:
             ts, _, key = heapq.heappop(self._heap)
             e = self.entries.get(key)
             if e is None or e.ts != ts:
                 continue                                   # stale heap record
-            del self.entries[key]
-            self.used -= e.size
-            self.evictions += 1
-            if getattr(e, "prefetched_unused", False):
-                self.prefetch_unused_evicted += 1
-                org = getattr(e, "origin", "")
-                self.pf_unused_by_origin[org] = \
-                    self.pf_unused_by_origin.get(org, 0) + 1
-            if e.dirty:
-                self.evict_buffer[key] = e                 # async write-back
+            self._remove_victim(e)
             return
         return
 
@@ -86,6 +132,12 @@ class TimestampAwareCache:
             self._evict_one()
             if self.used == before:
                 break
+
+    def set_clock(self, watermark: float) -> None:
+        """Advance the deadline_aware staleness boundary (the consuming
+        operator's event-time watermark)."""
+        if watermark > self.clock:
+            self.clock = watermark
 
     # ------------------------------------------------------------ public API
     def lookup(self, key: Any, now_ts: float) -> Optional[Any]:
@@ -166,6 +218,18 @@ class TimestampAwareCache:
             e.ts = hint_ts
             self._push(e)
         return True
+
+    def drop(self, key: Any) -> bool:
+        """Remove an entry outright — resident or staged — with NO
+        write-back and no unused-prefetch accounting.  The window purge
+        path (DESIGN.md §10): once a pane has fired and its lateness
+        horizon passed, its state is dead and must not cost a backend
+        write.  Heap records left behind go stale and are skipped lazily."""
+        e = self.entries.pop(key, None)
+        if e is not None:
+            self.used -= e.size
+            return True
+        return self.evict_buffer.pop(key, None) is not None
 
     def export_entries(self, pred: Callable[[Any], bool]) -> List[Entry]:
         """Shard migration drain (DESIGN.md §9): pop every entry — resident

@@ -228,6 +228,30 @@ def admit_owned(state: TACState, keys: jax.Array, ts: jax.Array,
                        sub(dirty)), n_dropped
 
 
+def evict_expired(state: TACState, watermark: float
+                  ) -> Tuple[TACState, jax.Array]:
+    """Watermark-driven bulk reclaim (DESIGN.md §10): invalidate every
+    occupied slot whose timestamp lies strictly behind ``watermark``.
+
+    Device-side primitive mirroring the engine's pane purge
+    (``WindowedStatefulOp._purge_pane``) for a future windowed serving
+    path — not yet wired into the scheduler.  Deadline-timestamped panes
+    whose deadline the event-time watermark has passed (plus any allowed
+    lateness, folded into ``watermark`` by the caller) have fired and are
+    dead weight — reclaiming in one fused update frees whole windows
+    without per-key eviction rounds.  Dirty bits are
+    cleared along with the slots: fired panes are purged, not written
+    back, so callers that still need the data must flush BEFORE the
+    watermark passes.  Returns (state, number of slots reclaimed).
+    """
+    expired = (state.keys >= 0) & (state.ts < watermark)
+    return TACState(
+        keys=jnp.where(expired, -1, state.keys),
+        ts=jnp.where(expired, -jnp.inf, state.ts),
+        vals=state.vals,
+        dirty=jnp.where(expired, False, state.dirty)), expired.sum()
+
+
 # --------------------------------------------------------------- migration
 class Exported(NamedTuple):
     state: TACState           # source state with the entries cleared

@@ -72,6 +72,12 @@ class StateBackend:
         self.bytes_written += size
         self.data[key] = value
 
+    def delete(self, key: Any) -> bool:
+        """Drop a key (fired-window purge, DESIGN.md §10).  Tombstone
+        writes are cheap and batched in real stores, so this is not
+        charged as workload I/O."""
+        return self.data.pop(key, None) is not None
+
     # ------------------------------------------------------ shard migration
     def export_keys(self, pred) -> Dict[Any, Any]:
         """Migration handoff (DESIGN.md §9): pop every entry whose key

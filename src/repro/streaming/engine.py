@@ -22,7 +22,7 @@ from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
 from repro.core.tac import TimestampAwareCache
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
-                                    Tuple_)
+                                    Tuple_, Watermark)
 from repro.streaming.shards import (MIGRATE_BANDWIDTH, MIGRATE_RTT,
                                     ShardPlane, hash_partition)
 
@@ -75,10 +75,13 @@ class Channel:
     never reorder behind buffered records.
     """
 
+    _ids = itertools.count()
+
     def __init__(self, sim: Sim, dst_op: "Operator", kind: str,
                  partition: Callable[[Any, int], int],
                  n_src: int, timeout: float = BUFFER_TIMEOUT):
         self.sim = sim
+        self.chan_id = next(Channel._ids)
         self.dst = dst_op
         self.kind = kind                  # data | hint
         self.partition = partition
@@ -94,6 +97,16 @@ class Channel:
             # control messages are broadcast and flush the buffer (order!)
             for d in range(self.dst.parallelism):
                 self.bufs[(src_sub, d)].append(msg)
+                self._flush(src_sub, d)
+            return
+        if isinstance(msg, Watermark):
+            # watermarks broadcast like markers, tagged with the (channel,
+            # src subtask) input they travelled on so the destination can
+            # take the min across ALL its inputs (DESIGN.md §10); flushing
+            # keeps them ordered behind the records they cover
+            for d in range(self.dst.parallelism):
+                self.bufs[(src_sub, d)].append(
+                    Watermark(msg.ts, origin=(self.chan_id, src_sub)))
                 self._flush(src_sub, d)
             return
         key = getattr(msg, "key", None)
@@ -157,6 +170,14 @@ class Operator:
         self.plan_pos = 0
         self.processed = 0
         self._barrier_seen = set()
+        # event-time watermark state (DESIGN.md §10): per-subtask current
+        # watermark, last value seen per input (channel, src subtask), and
+        # the number of inputs that must report before the min is valid
+        # (set by Engine.connect as data edges are wired)
+        self.wm = [float("-inf")] * parallelism
+        self._wm_in: List[Dict[Any, float]] = \
+            [dict() for _ in range(parallelism)]
+        self.wm_expected = 0
 
     # ------------------------------------------------------------- plumbing
     def deliver_batch(self, sub: int, batch: List[Any]) -> None:
@@ -193,8 +214,34 @@ class Operator:
         for ch in self.out_hint:
             ch.send(sub, msg)
 
+    # ----------------------------------------------------------- watermarks
+    def _recv_watermark(self, sub: int, w: Watermark) -> None:
+        """Min-of-inputs watermark propagation (DESIGN.md §10): the
+        subtask's watermark advances only once every input (channel, src
+        subtask) pair has reported, and then to the minimum across them."""
+        cur = self._wm_in[sub].get(w.origin, float("-inf"))
+        if w.ts > cur:
+            self._wm_in[sub][w.origin] = w.ts
+        if len(self._wm_in[sub]) < self.wm_expected:
+            return
+        new = min(self._wm_in[sub].values())
+        if new > self.wm[sub]:
+            self.wm[sub] = new
+            self.on_watermark(sub, new)
+            self.emit_watermark(sub, new)
+
+    def on_watermark(self, sub: int, wm: float) -> None:
+        """Hook: the subtask's event-time watermark advanced to ``wm``."""
+
+    def emit_watermark(self, sub: int, wm: float) -> None:
+        for ch in self.out_data:
+            ch.send(sub, Watermark(wm))
+
     # ------------------------------------------------------------ behaviour
     def handle(self, sub: int, msg: Any) -> Optional[float]:
+        if isinstance(msg, Watermark):
+            self._recv_watermark(sub, msg)
+            return 2e-7
         if isinstance(msg, Marker):
             self.on_marker(sub, msg)
             return 1e-7
@@ -243,6 +290,20 @@ class MapOp(Operator):
             self.emit_hint(sub, Marker(m.marker_id, lookahead_id=self.name))
         self.emit(sub, m)
 
+    def _emit_hints_for(self, sub: int, o: Tuple_) -> float:
+        """Hint Extractor for one output tuple; returns the extraction
+        cost.  The windowed lookahead (streaming/windows.py) overrides
+        this single hook to emit per-pane deadline hints."""
+        k = self.key_of(o)
+        if k is None:
+            return 0.0
+        if self.cms[sub].update_and_classify(k):
+            self.hints_suppressed += 1
+        else:
+            self.hints_emitted += 1
+            self.emit_hint(sub, Hint(k, o.ts, origin=self.name))
+        return HINT_COST
+
     def process(self, sub: int, tup: Tuple_) -> Optional[float]:
         out = self.fn(tup) if self.fn else tup
         svc = self.service_time
@@ -251,34 +312,42 @@ class MapOp(Operator):
         outs = out if isinstance(out, list) else [out]
         for o in outs:
             if self.hint_active and self.key_of is not None:
-                k = self.key_of(o)
-                if k is not None:
-                    svc += HINT_COST
-                    if self.cms[sub].update_and_classify(k):
-                        self.hints_suppressed += 1
-                    else:
-                        self.hints_emitted += 1
-                        self.emit_hint(sub, Hint(k, o.ts,
-                                                 origin=self.name))
+                svc += self._emit_hints_for(sub, o)
             self.emit(sub, o)
         return svc
 
 
 class SourceOp(Operator):
-    """Rate-driven source; generator yields (key, payload, size, kind)."""
+    """Rate-driven source; generator yields (key, payload, size) or
+    (key, payload, size, event_ts) for out-of-order event time.
+
+    With ``watermark_interval`` > 0 the source runs a bounded-out-of-
+    orderness watermark generator (DESIGN.md §10): every interval it
+    emits ``Watermark(max emitted event ts - oo_bound)`` on its data
+    edges — the promise that no tuple more than ``oo_bound`` behind the
+    frontier will follow (the generator's late tail beyond the bound is
+    exactly what the windowed late-data path handles).
+    """
 
     def __init__(self, engine, name, parallelism, rate: float, gen,
-                 service_time=1e-6):
+                 service_time=1e-6, watermark_interval: float = 0.0,
+                 oo_bound: float = 0.0):
         super().__init__(engine, name, parallelism, service_time)
         self.rate = rate
         self.gen = gen
         self.stopped = False
+        self.watermark_interval = watermark_interval
+        self.oo_bound = oo_bound
+        self._max_ts = [float("-inf")] * parallelism
 
     def start(self) -> None:
         per = self.rate / self.parallelism
         for s in range(self.parallelism):
             self.sim.after(1.0 / per * (s + 1) / self.parallelism,
                            self._tick, s, 1.0 / per)
+            if self.watermark_interval > 0:
+                self.sim.after(self.watermark_interval * (s + 1)
+                               / self.parallelism, self._wm_tick, s)
 
     def _tick(self, sub: int, interval: float) -> None:
         if self.stopped:
@@ -286,12 +355,25 @@ class SourceOp(Operator):
         now = self.sim.t
         rec = self.gen(now)
         if rec is not None:
-            tup = Tuple_(ts=now, key=rec[0], payload=rec[1], size=rec[2],
+            ts = rec[3] if len(rec) > 3 else now
+            tup = Tuple_(ts=ts, key=rec[0], payload=rec[1], size=rec[2],
                          ingest_t=now)
+            if ts > self._max_ts[sub]:
+                self._max_ts[sub] = ts
             self.processed += 1
             self.busy_time[sub] += self.service_time
             self.emit(sub, tup)
         self.sim.after(interval, self._tick, sub, interval)
+
+    def _wm_tick(self, sub: int) -> None:
+        if self.stopped:
+            return
+        if self._max_ts[sub] > float("-inf"):
+            wm = self._max_ts[sub] - self.oo_bound
+            if wm > self.wm[sub]:
+                self.wm[sub] = wm
+                self.emit_watermark(sub, wm)
+        self.sim.after(self.watermark_interval, self._wm_tick, sub)
 
 
 @dataclass
@@ -327,7 +409,9 @@ class StatefulOp(Operator):
                  io_workers: int = 4, state_size: int = 200,
                  service_time: float = 3e-6, read_only: bool = False,
                  default_state=None, gamma: float = 0.003,
+                 miss_threshold: float = 0.0,
                  dense_backend: bool = False,
+                 deadline_aware: bool = False,
                  shards: Optional[ShardPlane] = None):
         super().__init__(engine, name, parallelism, service_time)
         if shards is not None and shards.n_owners != parallelism:
@@ -344,7 +428,11 @@ class StatefulOp(Operator):
         self.managers: List[PrefetchingManager] = []
         for s in range(parallelism):
             if policy == "tac":
-                c = TimestampAwareCache(cache_capacity)
+                # deadline_aware: window panes carry far-future fire
+                # deadlines, where plain min-ts eviction would remove the
+                # panes firing next (core/tac.py, DESIGN.md §10)
+                c = TimestampAwareCache(cache_capacity,
+                                        deadline_aware=deadline_aware)
             elif policy == "clock":
                 c = ClockCache(cache_capacity)
             else:
@@ -355,7 +443,11 @@ class StatefulOp(Operator):
                 assume_present=dense_backend))
             self.managers.append(PrefetchingManager(
                 name, s, engine.controller, gamma=gamma,
+                miss_threshold=miss_threshold,
                 shared=self.managers[0] if self.managers else None))
+        # event-time lateness horizon for hint admission (windowed
+        # subclasses widen it); with wm at -inf nothing is ever late
+        self.hint_lateness = 0.0
         self.io_free = [io_workers] * parallelism
         self.io_q: List[deque] = [deque() for _ in range(parallelism)]
         self.waiting: List[Dict[Any, List[Tuple_]]] = \
@@ -368,6 +460,9 @@ class StatefulOp(Operator):
 
     # ------------------------------------------------------------- messages
     def handle(self, sub: int, msg: Any) -> Optional[float]:
+        if isinstance(msg, Watermark):
+            self._recv_watermark(sub, msg)
+            return 2e-7
         if self.shards is not None and \
                 isinstance(msg, (Hint, Tuple_)) and msg.key is not None:
             routed = self._shard_guard(sub, msg)
@@ -481,7 +576,12 @@ class StatefulOp(Operator):
 
     def _on_hint(self, sub: int, h: Hint) -> float:
         mgr = self.managers[sub]
-        if mgr.on_hint(h.key, h.ts, self.caches[sub]):
+        # hints whose access ts fell behind the lateness horizon target
+        # state the operator will drop or has purged (windowed, §10);
+        # with no watermarks wm is -inf and the check never fires
+        if mgr.on_hint(h.key, h.ts, self.caches[sub],
+                       watermark=self.wm[sub],
+                       lateness=self.hint_lateness):
             mgr.hints.take(h.key)         # unprocessed -> in-flight
             self._io_enqueue(sub, _IOReq("prefetch", h.key, h.ts,
                                          origin=h.origin))
@@ -546,6 +646,16 @@ class StatefulOp(Operator):
                                                          self.state_size)
             self.sim.after(lat, self._io_done, sub, req, lat)
 
+    def _completion_dead(self, sub: int, req: _IOReq) -> bool:
+        """Hook: True when the state this completion targets was PURGED
+        while the I/O was in flight (fired window panes, §10) — the write
+        or insert must not resurrect it.  Base operators never purge."""
+        return False
+
+    def _on_dead_parked(self, sub: int, tup: Tuple_) -> None:
+        """Hook: a tuple parked on a key whose state was purged mid-fetch
+        (windowed subclasses count it as late)."""
+
     def _io_done(self, sub: int, req: _IOReq, lat: float) -> None:
         self.io_free[sub] += 1
         cache = self.caches[sub]
@@ -553,11 +663,14 @@ class StatefulOp(Operator):
         if req.kind == "write":
             # a write-back in flight across a migration must land in the
             # CURRENT owner's partition (the shard's backend entries moved
-            # at drain time and this lane still holds the latest state)
-            dst = sub if self.shards is None \
-                else self.shards.owner_of(req.key)
-            self.backends[dst].write(req.key, req.entry.state,
-                                     self.state_size)
+            # at drain time and this lane still holds the latest state) —
+            # unless the state was purged meanwhile (dead panes must not
+            # be resurrected in the backend)
+            if not self._completion_dead(sub, req):
+                dst = sub if self.shards is None \
+                    else self.shards.owner_of(req.key)
+                self.backends[dst].write(req.key, req.entry.state,
+                                         self.state_size)
         elif self.shards is not None and \
                 self.shards.owner_of(req.key) != sub:
             # the shard migrated while this fetch was in flight: its cache
@@ -566,6 +679,14 @@ class StatefulOp(Operator):
             mgr.hints.complete(req.key)
             mgr.hints.discard(req.key)
             self.in_flight[sub].discard(req.key)
+        elif self._completion_dead(sub, req):
+            # the pane was purged while this fetch was in flight: drop
+            # the completion, and anything parked on it is late
+            mgr.hints.complete(req.key)
+            mgr.hints.discard(req.key)
+            self.in_flight[sub].discard(req.key)
+            for tup in self.waiting[sub].pop(req.key, []):
+                self._on_dead_parked(sub, tup)
         else:
             state, _ = self.backends[sub].fetch(req.key, self.state_size)
             hint_ts = mgr.hints.complete(req.key)
@@ -689,6 +810,9 @@ class Engine:
             src.out_hint.append(ch)
         else:
             src.out_data.append(ch)
+            # watermarks flow on data edges only: every (channel, src
+            # subtask) pair must report before the min-of-inputs advances
+            dst.wm_expected += src.parallelism
 
     def register_prefetching(self, stateful: StatefulOp,
                              lookaheads: List[MapOp]) -> None:
@@ -824,8 +948,19 @@ class Engine:
                     m.prefetch_hits for m in op.managers)
                 out[f"{name}_hints_received"] = sum(
                     m.hints_received for m in op.managers)
+                out[f"{name}_hints_late"] = sum(
+                    m.hints_late for m in op.managers)
                 if op.shards is not None:
                     # per-shard routed-plane counters (DESIGN.md §9), not
                     # just the global totals above
                     out[f"{name}_shard_plane"] = op.shards.snapshot()
+        for name, op in self.operators.items():
+            # operator-specific counters (windowed fires/late paths, burst
+            # hints, ...) without the engine importing those modules
+            extra = getattr(op, "extra_metrics", None)
+            if callable(extra):
+                for k, v in extra().items():
+                    out[f"{name}_{k}"] = v
+            if any(w > float("-inf") for w in op.wm):
+                out[f"{name}_watermark"] = list(op.wm)
         return out

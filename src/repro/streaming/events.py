@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 
 @dataclass
@@ -14,10 +14,39 @@ class Tuple_:
     ingest_t: float = 0.0     # processing time entering the pipeline
 
 
+class WindowKey(NamedTuple):
+    """State-access key of one window pane: ``(base key, window id)``.
+
+    Routing (``hash_partition``, ``ShardPlane.shard_of``) unwraps ``base``
+    so every pane of a key — and every hint for it — lands on the subtask
+    that owns the key itself (DESIGN.md §10).
+    """
+    base: Any
+    wid: int
+
+
 @dataclass
 class Hint:
+    """Keyed-prefetching hint (DESIGN.md §3, §10).
+
+    ``ts`` is the PREDICTED ACCESS TIMESTAMP of ``key`` — it must be in
+    the same clock domain the consuming cache orders entries by, and that
+    domain differs per plane:
+
+      * streaming engine: EVENT time.  Per-tuple lookaheads use the
+        tuple's event timestamp (the access happens when the tuple
+        reaches the stateful operator); windowed lookaheads use the
+        WINDOW-FIRE DEADLINE (window end), the exact event time at which
+        the pane is read on watermark advance.
+      * serving scheduler: PROCESSING (wall/sim) time — the predicted
+        decode-start time of the session (DESIGN.md §6).
+
+    The two domains never mix inside one TAC: each stateful operator /
+    arena orders by exactly one clock.  ``PrefetchingManager.on_hint``
+    names the parameter ``access_ts`` for this reason.
+    """
     key: Any
-    ts: float                 # event time at which the key will be accessed
+    ts: float                 # predicted access timestamp (see above)
     origin: str = ""          # lookahead operator that emitted the hint
     size: int = 24            # key + timestamp on the wire
 
@@ -32,7 +61,12 @@ class Marker:
 
 @dataclass
 class Watermark:
+    """Event-time watermark: a promise that no tuple with ``ts`` below
+    this will follow on the same input (modulo allowed lateness).
+    ``origin`` identifies the (channel, src subtask) pair so operators can
+    take the min across ALL their inputs (DESIGN.md §10)."""
     ts: float
+    origin: Any = None
     size: int = 16
 
 

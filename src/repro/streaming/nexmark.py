@@ -39,6 +39,13 @@ class NexmarkConfig:
     hot_bidder_prob: float = 0.75
     auctions_per_s: float = None      # derived from rate (6%)
     seed: int = 7
+    # bounded out-of-orderness (event-time queries, DESIGN.md §10): event
+    # timestamps trail arrival by U(0, oo_bound); a late_prob fraction
+    # trails by up to 2x the bound — genuinely LATE under a watermark of
+    # (max event ts - oo_bound), exercising the drop/update paths
+    oo_bound: float = 0.0
+    late_prob: float = 0.02
+    watermark_interval: float = 0.05
 
     def __post_init__(self):
         if self.auctions_per_s is None:
@@ -78,7 +85,24 @@ class NexmarkGen:
             return min(hi - 1, int(int(now) * per_s))
         return self.rng.randint(lo, max(lo, hi - 1))
 
+    def _event_ts(self, now: float) -> float:
+        """Bounded-out-of-orderness event time (only when cfg.oo_bound>0):
+        most events trail arrival by U(0, bound), a small fraction by up
+        to 2x the bound (late under the watermark)."""
+        b = self.cfg.oo_bound
+        if self.rng.random() < self.cfg.late_prob:
+            delay = b * (1.0 + self.rng.random())
+        else:
+            delay = b * self.rng.random()
+        return max(0.0, now - delay)
+
     def __call__(self, now: float):
+        rec = self._gen(now)
+        if rec is not None and self.cfg.oo_bound > 0:
+            rec = rec + (self._event_ts(now),)
+        return rec
+
+    def _gen(self, now: float):
         self.n += 1
         r = self.rng.random()
         if r < 0.92:
@@ -123,7 +147,11 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 io_workers: int = 4,
                 cms_conf: Optional[dict] = None,
                 n_shards: Optional[int] = None,
-                buffer_timeout: Optional[float] = None) -> Engine:
+                buffer_timeout: Optional[float] = None,
+                hint_ts: str = "deadline",
+                window_size: Optional[float] = None,
+                window_slide: Optional[float] = None,
+                allowed_lateness: Optional[float] = None) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -131,7 +159,19 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     ``Engine.migrate_shard`` can rebalance mid-run.  ``buffer_timeout``
     overrides the data channels' flush timeout (Flink's low-latency gear,
     e.g. 2 ms, keeps the latency floor from masking state-access effects
-    in latency-focused benchmarks)."""
+    in latency-focused benchmarks).
+
+    The event-time windowed queries q5 (hot items, sliding) and q7
+    (highest bid, tumbling) additionally take ``hint_ts`` ("deadline" =
+    window-fire deadline hints + burst prefetch, "arrival" = per-tuple
+    event-ts hints, the ablation), window geometry overrides, and
+    ``allowed_lateness`` (DESIGN.md §10)."""
+    if query in ("q5", "q7"):
+        return _build_windowed_query(
+            query, policy, mode, cfg, cache_entries, backend, parallelism,
+            source_parallelism, io_workers, cms_conf, n_shards,
+            buffer_timeout, hint_ts, window_size, window_slide,
+            allowed_lateness)
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
 
@@ -301,4 +341,110 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
         eng.register_prefetching(stateful, [parse, norm])
+    return eng
+
+
+def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
+                          parallelism, source_parallelism, io_workers,
+                          cms_conf, n_shards, buffer_timeout, hint_ts,
+                          window_size, window_slide, allowed_lateness):
+    """Event-time windowed NEXMark queries (DESIGN.md §10).
+
+    q5 (hot items, simplified): bid count per auction per SLIDING window,
+    late tuples re-aggregate and re-emit (late-side update); the global
+    argmax is a cheap downstream fold.  q7 (highest bid, simplified): max
+    bid per auction per TUMBLING window, late tuples dropped.  Both key
+    panes by ``WindowKey(auction, wid)`` and fire on watermark advance.
+    """
+    import itertools as _it
+
+    from repro.streaming.windows import (WindowAssigner, WindowedLookaheadOp,
+                                         WindowedStatefulOp)
+
+    if cfg.oo_bound <= 0:
+        raise ValueError("windowed queries need cfg.oo_bound > 0 "
+                         "(event-time watermarks)")
+
+    if query == "q5":
+        size = 2.0 if window_size is None else window_size
+        slide = size / 2 if window_slide is None else window_slide
+        lateness = (slide if allowed_lateness is None
+                    else allowed_lateness)
+        late_policy = "update"
+        state_size = 96                   # a counter + pane metadata
+
+        def agg_fn(tup, acc):
+            return (acc or 0) + 1
+
+        def emit_fn(key, wid, end, acc):
+            return ("count", key, acc) if acc else None
+    else:                                 # q7
+        size = 2.0 if window_size is None else window_size
+        slide = size if window_slide is None else window_slide
+        lateness = 0.0 if allowed_lateness is None else allowed_lateness
+        late_policy = "drop" if lateness == 0 else "update"
+        state_size = 96
+
+        def agg_fn(tup, acc):
+            price = tup.payload["price"]
+            return price if acc is None or price > acc else acc
+
+        def emit_fn(key, wid, end, acc):
+            return ("maxbid", key, acc) if acc is not None else None
+
+    assigner = WindowAssigner(size, slide)
+    eng = _mk_engine()
+    gen = NexmarkGen(cfg)
+
+    def bid_filter(tup: Tuple_):
+        return tup if tup.payload["type"] == BID else None
+
+    def key_of(tup: Tuple_):
+        p = tup.payload
+        return p["auction"] if p["type"] == BID else None
+
+    def rekey(tup: Tuple_):
+        tup.key = tup.payload["auction"]
+        return tup
+
+    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
+                           gen, watermark_interval=cfg.watermark_interval,
+                           oo_bound=cfg.oo_bound))
+    parse = eng.add(MapOp(eng, "parser", parallelism, fn=bid_filter,
+                          service_time=15e-6))
+    winla = eng.add(WindowedLookaheadOp(
+        eng, "win_lookahead", parallelism, assigner, key_of, fn=rekey,
+        hint_ts_mode=hint_ts, burst_ahead=2 * cfg.watermark_interval,
+        allowed_lateness=lateness, service_time=10e-6, cms_conf=cms_conf))
+    plane = None
+    if n_shards is not None:
+        from repro.streaming.shards import ShardPlane
+        plane = ShardPlane(n_shards, parallelism)
+    stateful = eng.add(WindowedStatefulOp(
+        eng, "stateful", parallelism, assigner, agg_fn, emit_fn, backend,
+        cache_entries * state_size, allowed_lateness=lateness,
+        late_policy=late_policy, policy=policy, mode=mode,
+        io_workers=io_workers, state_size=state_size,
+        # arrival-ts hints are accurate in KEY, only mistimed: disable the
+        # per-origin mismatch discard so the ablation stays on (§10); the
+        # deadline-aware eviction order belongs to deadline hints only —
+        # arrival timestamps are recency, and ranking them as deadlines
+        # would evict the hottest keys first
+        miss_threshold=1.01, deadline_aware=(hint_ts == "deadline"),
+        shards=plane))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+
+    from repro.streaming.engine import BUFFER_TIMEOUT
+    to = BUFFER_TIMEOUT if buffer_timeout is None else buffer_timeout
+    rr = _it.count()
+    eng.connect(src, parse, partition=lambda k, n: next(rr) % n, timeout=to)
+    rr2 = _it.count()
+    eng.connect(parse, winla, partition=lambda k, n: next(rr2) % n,
+                timeout=to)
+    eng.connect(winla, stateful,
+                partition=plane.route_data if plane else hash_partition,
+                timeout=to)
+    eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
+    if mode == "prefetch":
+        eng.register_prefetching(stateful, [winla])
     return eng

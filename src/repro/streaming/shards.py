@@ -27,7 +27,12 @@ MIGRATE_BANDWIDTH = 1.2e9
 
 
 def hash_partition(key: Any, n: int) -> int:
-    """Canonical key partitioner (also the engine's channel default)."""
+    """Canonical key partitioner (also the engine's channel default).
+
+    Window-pane keys (``WindowKey`` — anything exposing ``.base``) hash by
+    their BASE key: every pane of a key, and every hint for one, must land
+    on the subtask that owns the key itself (DESIGN.md §10)."""
+    key = getattr(key, "base", key)
     return hash(key) % n if key is not None else 0
 
 

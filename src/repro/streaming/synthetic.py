@@ -27,6 +27,12 @@ class SyntheticConfig:
     t_mismatch: float = 10.0
     t_latency_drop: float = 20.0
     seed: int = 3
+    # bounded out-of-orderness (DESIGN.md §10): event ts trails arrival by
+    # U(0, oo_bound); with watermark_interval > 0 the source also emits
+    # Watermark(max ts - oo_bound) so downstream event-time operators
+    # (windows.py) can run on the synthetic plan
+    oo_bound: float = 0.0
+    watermark_interval: float = 0.0
 
 
 def build_synthetic(cfg: SyntheticConfig, policy: str = "tac",
@@ -38,6 +44,9 @@ def build_synthetic(cfg: SyntheticConfig, policy: str = "tac",
 
     def gen(now: float):
         k = rng.randint(0, cfg.n_keys - 1)
+        if cfg.oo_bound > 0:
+            return (k, {"k": k}, 150,
+                    max(0.0, now - cfg.oo_bound * rng.random()))
         return (k, {"k": k}, 150)
 
     def key_of(tup: Tuple_):
@@ -53,7 +62,9 @@ def build_synthetic(cfg: SyntheticConfig, policy: str = "tac",
     def apply_fn(tup, state):
         return state, [Tuple_(tup.ts, tup.key, state, 170, tup.ingest_t)]
 
-    src = eng.add(SourceOp(eng, "source", 1, cfg.rate, gen))
+    src = eng.add(SourceOp(eng, "source", 1, cfg.rate, gen,
+                           watermark_interval=cfg.watermark_interval,
+                           oo_bound=cfg.oo_bound))
     udf0 = eng.add(MapOp(eng, "udf0", parallelism, fn=None,
                          service_time=12e-6, key_of=key_of))
     udf1 = eng.add(MapOp(eng, "udf1", parallelism, fn=udf1_fn,

@@ -180,6 +180,33 @@ def test_hints_take_specific_key():
     assert hb.complete("b") == 2.0
 
 
+def test_hints_buffer_dropped_counter_at_max_size():
+    hb = HintsBuffer(max_size=2)
+    hb.add("a", 1.0)
+    hb.add("b", 2.0)
+    hb.add("c", 3.0)                     # over capacity: dropped
+    assert hb.dropped == 1 and len(hb) == 2 and not hb.pending("c")
+    # merges into existing keys are NOT drops, even at capacity
+    hb.add("a", 9.0)
+    assert hb.dropped == 1 and hb.unprocessed["a"] == 9.0
+    # in-flight keys free their unprocessed slot
+    hb.take("a")
+    hb.add("d", 4.0)
+    assert hb.dropped == 1 and hb.pending("d")
+
+
+def test_hints_buffer_inflight_max_ts_merge_on_readd():
+    hb = HintsBuffer()
+    hb.add("k", 5.0)
+    assert hb.take("k") == 5.0
+    hb.add("k", 3.0)                     # older re-add: ts keeps the max
+    assert hb.in_flight["k"] == 5.0 and "k" not in hb.unprocessed
+    hb.add("k", 9.0)                     # newer re-add: merges upward
+    assert hb.in_flight["k"] == 9.0 and "k" not in hb.unprocessed
+    assert hb.complete("k") == 9.0
+    assert len(hb) == 0
+
+
 # ---------------------------------------------------- controller adaptation
 def _mk_ctl():
     ctl = PrefetchingController()

@@ -64,3 +64,21 @@ def test_equivalence_with_python_tac(trace):
     py_keys = set(py.entries.keys())
     dev_keys = set(int(k) for k in np.asarray(dev.keys[0]) if k >= 0)
     assert dev_keys == py_keys
+
+
+def test_evict_expired_reclaims_fired_panes():
+    """Watermark-driven bulk reclaim (DESIGN.md §10): slots whose ts fell
+    behind the watermark — fired window panes — are invalidated in one
+    fused update, dirty bits cleared (purged, not written back)."""
+    state = tac_jax.init(2, 4, 4)
+    keys = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    state = tac_jax.admit(state, keys, jnp.asarray([1., 5., 9., 12.]),
+                          jnp.ones((4, 4)),
+                          jnp.asarray([True, True, False, False]))
+    state, n = tac_jax.evict_expired(state, 6.0)
+    assert int(n) == 2
+    _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(4))
+    assert list(np.asarray(hit)) == [False, False, True, True]
+    assert not bool(np.asarray(state.dirty).any())
+    state, n = tac_jax.evict_expired(state, 6.0)     # idempotent
+    assert int(n) == 0

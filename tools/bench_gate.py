@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""CI perf gate over BENCH_*.json artifacts (the bench-smoke job).
+
+For every file passed on the command line, checks that prefetching keeps
+its headline advantage on the (smoke) config it was run with:
+
+  * serving  (``BENCH_serving*.json``):  ``prefetch.ttft_p99`` must be
+    <= ``sync.ttft_p99`` (on-demand staging);
+  * windowing (``BENCH_windowing*.json``): for every query present,
+    ``deadline.p99`` must be <= ``ondemand.p99`` (and is also reported
+    against ``arrival``, informationally — the smoke config is small
+    enough that only the on-demand bound is load-bearing).
+
+Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def gate_serving(data: dict, fails: list, name: str) -> None:
+    sync = data.get("sync")
+    pf = data.get("prefetch")
+    if not sync or not pf:
+        fails.append(f"{name}: missing sync/prefetch results")
+        return
+    s, p = sync["ttft_p99"], pf["ttft_p99"]
+    ok = p <= s
+    print(f"  serving: prefetch ttft_p99 {p*1e3:.2f}ms vs on-demand "
+          f"{s*1e3:.2f}ms -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        fails.append(f"{name}: prefetch ttft_p99 ({p:.4f}s) > on-demand "
+                     f"({s:.4f}s)")
+
+
+def gate_windowing(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        rs = data[q]
+        dl, od = rs.get("deadline"), rs.get("ondemand")
+        if not dl or not od:
+            fails.append(f"{name}: {q} missing deadline/ondemand results")
+            continue
+        ok = dl["p99"] <= od["p99"]
+        arr = rs.get("arrival")
+        extra = (f", arrival {arr['p99']*1e3:.2f}ms" if arr else "")
+        print(f"  windowing {q}: deadline p99 {dl['p99']*1e3:.2f}ms vs "
+              f"on-demand {od['p99']*1e3:.2f}ms{extra} -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} deadline p99 ({dl['p99']:.4f}s) > "
+                         f"on-demand ({od['p99']:.4f}s)")
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: bench_gate.py BENCH_*.json ...")
+        return 2
+    fails: list = []
+    for arg in argv:
+        path = Path(arg)
+        name = path.name
+        if not path.exists():
+            fails.append(f"{name}: not found")
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            fails.append(f"{name}: invalid JSON ({e})")
+            continue
+        print(f"{name}:")
+        if "serving" in name:
+            gate_serving(data, fails, name)
+        elif "windowing" in name:
+            gate_windowing(data, fails, name)
+        else:
+            fails.append(f"{name}: no gate rule for this artifact")
+    if fails:
+        print("bench gate FAILED:")
+        for f in fails:
+            print(f"  - {f}")
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -7,12 +7,17 @@ Fails when:
   * ``README.md`` references a ``BENCH_*.json`` artifact that is not
     checked in at the repo root;
   * ``README.md`` references a module path (``repro.x.y``) or a
-    repo-relative file path in backticks that does not exist.
+    repo-relative file path in backticks that does not exist;
+  * a checked-in ``BENCH_*.json`` is unparseable, empty, or missing its
+    ``config`` block / result entries (schema check);
+  * ``CHANGES.md`` lacks an entry for the current PR number (taken from
+    the ``# ISSUE <n>`` heading of ``ISSUE.md``, when present).
 
 Stdlib only — runs anywhere Python does:  ``python tools/check_docs.py``
 """
 from __future__ import annotations
 
+import json
 import re
 import sys
 from pathlib import Path
@@ -66,6 +71,46 @@ def check_readme(readme: Path, fails: list) -> None:
             fails.append(f"README.md: path `{code}` does not exist")
 
 
+def check_bench_schemas(fails: list) -> int:
+    """Every checked-in BENCH_*.json must be parseable, non-empty, carry a
+    ``config`` block, and at least one non-config result entry."""
+    n = 0
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        n += 1
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            fails.append(f"{path.name}: invalid JSON ({e})")
+            continue
+        if not isinstance(data, dict) or not data:
+            fails.append(f"{path.name}: expected a non-empty JSON object")
+            continue
+        if "config" not in data:
+            fails.append(f"{path.name}: missing top-level 'config'")
+        if not [k for k in data if k != "config"]:
+            fails.append(f"{path.name}: no result entries besides 'config'")
+    return n
+
+
+def check_changes(fails: list) -> None:
+    """CHANGES.md must have an entry for the PR this tree is building
+    (the ``# ISSUE <n>`` heading of ISSUE.md names it)."""
+    changes = ROOT / "CHANGES.md"
+    if not changes.exists():
+        fails.append("CHANGES.md is missing")
+        return
+    issue = ROOT / "ISSUE.md"
+    if not issue.exists():
+        return
+    m = re.search(r"^#\s*ISSUE\s+(\d+)", issue.read_text(), re.M)
+    if m is None:
+        return
+    n = m.group(1)
+    if not re.search(rf"^PR {n}:", changes.read_text(), re.M):
+        fails.append(f"CHANGES.md: no 'PR {n}:' entry for the current "
+                     f"ISSUE ({n}) — append one describing this PR")
+
+
 def main() -> int:
     fails: list = []
     md_files = sorted(ROOT.glob("*.md"))
@@ -76,12 +121,15 @@ def main() -> int:
     readme = ROOT / "README.md"
     if readme.exists():
         check_readme(readme, fails)
+    n_bench = check_bench_schemas(fails)
+    check_changes(fails)
     if fails:
         print("docs check FAILED:")
         for f in fails:
             print(f"  - {f}")
         return 1
-    print(f"docs check OK ({len(md_files)} markdown files)")
+    print(f"docs check OK ({len(md_files)} markdown files, "
+          f"{n_bench} BENCH artifacts)")
     return 0
 
 
