@@ -1,9 +1,14 @@
 """Baseline cache policies (paper §VI baselines): LRU and Clock.
 
-Same interface as TimestampAwareCache so the stateful operator is
-policy-agnostic.  Both support the dirty/eviction-buffer protocol so the
-Async-I/O baseline can also write back off the critical path (as Flink's
-RocksDB cache does via the memtable).
+Same interface as the Timestamp-Aware Cache (``core/tac.py``,
+DESIGN.md §3) so the stateful operator is policy-agnostic: ``lookup`` /
+``insert`` / ``write`` / ``contains``, the dirty/eviction-buffer
+protocol (``pop_writeback`` / ``flush_dirty``, §3 and §7) so the
+Async-I/O baseline can also write back off the critical path (as
+Flink's RocksDB cache does via the memtable), the migration drain
+``export_entries`` (§9), and the purge ``drop`` (§10, §11).  Timestamp
+arguments are accepted and ignored — LRU/Clock order is positional, so
+hint ``renew`` degenerates to a residency check.
 """
 from __future__ import annotations
 
@@ -43,10 +48,11 @@ class _BaseCache:
         return e
 
     def export_entries(self, pred) -> List[_E]:
-        """Shard migration drain: pop every entry (resident + eviction
-        buffer) whose key satisfies ``pred``.  ``_E`` carries no timestamp
-        (LRU/Clock order is positional), so the destination re-inserts at
-        migration time — the TAC keeps true timestamps (core/tac.py)."""
+        """Shard migration drain (DESIGN.md §9): pop every entry
+        (resident + eviction buffer) whose key satisfies ``pred``.
+        ``_E`` carries no timestamp (LRU/Clock order is positional), so
+        the destination re-inserts at migration time — the TAC keeps
+        true timestamps (core/tac.py)."""
         out = []
         for key in [k for k in self.entries if pred(k)]:
             e = self.entries.pop(key)
@@ -76,8 +82,9 @@ class _BaseCache:
         raise NotImplementedError
 
     def drop(self, key) -> bool:
-        """Remove an entry outright (window purge, DESIGN.md §10): no
-        write-back, no eviction accounting."""
+        """Remove an entry outright (window-pane purge §10, interval-key
+        expiry §11 — DESIGN.md): no write-back, no eviction
+        accounting."""
         e = self.entries.pop(key, None)
         if e is not None:
             self.used -= e.size

@@ -228,23 +228,34 @@ def admit_owned(state: TACState, keys: jax.Array, ts: jax.Array,
                        sub(dirty)), n_dropped
 
 
-def evict_expired(state: TACState, watermark: float
-                  ) -> Tuple[TACState, jax.Array]:
-    """Watermark-driven bulk reclaim (DESIGN.md §10): invalidate every
-    occupied slot whose timestamp lies strictly behind ``watermark``.
+def evict_expired(state: TACState, watermark: float,
+                  retention: Any = 0.0) -> Tuple[TACState, jax.Array]:
+    """Watermark-driven bulk reclaim (DESIGN.md §10, §11): invalidate
+    every occupied slot whose EXPIRY time lies strictly behind
+    ``watermark``.
 
     Device-side primitive mirroring the engine's pane purge
-    (``WindowedStatefulOp._purge_pane``) for a future windowed serving
-    path — not yet wired into the scheduler.  Deadline-timestamped panes
-    whose deadline the event-time watermark has passed (plus any allowed
-    lateness, folded into ``watermark`` by the caller) have fired and are
-    dead weight — reclaiming in one fused update frees whole windows
-    without per-key eviction rounds.  Dirty bits are
-    cleared along with the slots: fired panes are purged, not written
-    back, so callers that still need the data must flush BEFORE the
-    watermark passes.  Returns (state, number of slots reclaimed).
+    (``WindowedStatefulOp._purge_pane``) and interval-key expiry
+    (``IntervalJoinOp._purge_key``) for a future windowed/join serving
+    path — not yet wired into the scheduler.  The expiry time is
+    ``ts + retention``:
+
+      * ``retention == 0`` (default) — the slot timestamp IS the expiry
+        deadline (window panes admitted with their fire deadline, §10);
+      * ``retention > 0`` — slots admitted at their insertion/access
+        timestamp expire at their INTERVAL END instead (interval-join
+        entries whose matchability outlives the access that admitted
+        them, §11).  ``retention`` may be a scalar (one bound for the
+        whole cache) or a ``[n_buckets, ways]`` array (per-slot bounds,
+        e.g. side-dependent ``hi`` vs ``−lo``).
+
+    Allowed lateness is folded into ``watermark`` by the caller.  Dirty
+    bits are cleared along with the slots: expired state is purged, not
+    written back, so callers that still need the data must flush BEFORE
+    the watermark passes.  Returns (state, number of slots reclaimed).
     """
-    expired = (state.keys >= 0) & (state.ts < watermark)
+    expiry = state.ts + jnp.asarray(retention, state.ts.dtype)
+    expired = (state.keys >= 0) & (expiry < watermark)
     return TACState(
         keys=jnp.where(expired, -1, state.keys),
         ts=jnp.where(expired, -jnp.inf, state.ts),

@@ -12,6 +12,14 @@ sellers' person profiles with their auctions (keyed by seller, emitting
 only "local" sellers), Q4 tracks the max bid and category per auction
 (keyed by auction).  Both exercise a different key population than the
 bid-dominated Q13/Q18-Q20 — person/seller keys churn far more slowly.
+
+The event-time windowed queries q5/q7 (DESIGN.md §10) and the
+stream-stream join queries (§11, benchmarks/joins.py) ride the same
+generator: q8 joins newly registered persons with the auctions they open
+in the same TUMBLING window (co-grouped panes, fired on watermark), and
+q20 — when ``cfg.oo_bound > 0`` enables event time — becomes a true
+auction⋈bid INTERVAL join with dual per-key buffers, retention-deadline
+expiry, and two-sided hints.
 """
 from __future__ import annotations
 
@@ -151,7 +159,9 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 hint_ts: str = "deadline",
                 window_size: Optional[float] = None,
                 window_slide: Optional[float] = None,
-                allowed_lateness: Optional[float] = None) -> Engine:
+                allowed_lateness: Optional[float] = None,
+                join_hints: str = "two",
+                join_horizon: Optional[float] = None) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -165,13 +175,28 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     (highest bid, tumbling) additionally take ``hint_ts`` ("deadline" =
     window-fire deadline hints + burst prefetch, "arrival" = per-tuple
     event-ts hints, the ablation), window geometry overrides, and
-    ``allowed_lateness`` (DESIGN.md §10)."""
+    ``allowed_lateness`` (DESIGN.md §10).
+
+    The stream-stream JOIN queries (DESIGN.md §11) — q8 (tumbling-window
+    person⋈auction) and q20 with ``cfg.oo_bound > 0`` (event-time
+    auction⋈bid interval join; without watermarks q20 keeps its original
+    processing-time incremental-join form, the paper-figure baseline) —
+    additionally take ``join_hints`` ("two" = both sides emit cross-side
+    hints, "one" = probe side only, the ablation) and, for the interval
+    join, ``join_horizon`` (how long an auction accepts bids; defaults
+    to ``cfg.active_window``)."""
     if query in ("q5", "q7"):
         return _build_windowed_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, window_slide,
             allowed_lateness)
+    if query == "q8" or (query == "q20" and cfg.oo_bound > 0):
+        return _build_join_query(
+            query, policy, mode, cfg, cache_entries, backend, parallelism,
+            source_parallelism, io_workers, cms_conf, n_shards,
+            buffer_timeout, hint_ts, window_size, allowed_lateness,
+            join_hints, join_horizon)
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
 
@@ -447,4 +472,170 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
     eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
         eng.register_prefetching(stateful, [winla])
+    return eng
+
+
+def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
+                      parallelism, source_parallelism, io_workers,
+                      cms_conf, n_shards, buffer_timeout, hint_ts,
+                      window_size, allowed_lateness, join_hints,
+                      join_horizon):
+    """Stream-stream join queries with two-sided keyed prefetching
+    (DESIGN.md §11).
+
+    q8 (simplified classic NEXMark): persons who registered AND opened an
+    auction in the same TUMBLING window — a co-grouped windowed join
+    keyed by person/seller id (``WindowedJoinOp``), firing on watermark.
+    Left side = person registrations, right side = that seller's
+    auctions; hints carry the pane's window-fire deadline.
+
+    q20 (event-time form): each bid enriched with its auction record
+    when the auction is in category 10 — an INTERVAL join keyed by
+    auction id (``IntervalJoinOp``) with bounds ``[0, join_horizon]``
+    (a bid matches an auction opened up to ``join_horizon`` earlier).
+    Auction entries retain until their interval end, bids only across
+    the out-of-orderness slack, and expired keys purge on watermark
+    advance.  Hints carry RETENTION deadlines: an auction hint protects
+    the key's dual buffers for the auction's whole matchable life.
+
+    ``join_hints``: "two" = both sides emit cross-side hints, "one" =
+    probe side only (auctions for q8, bids for q20 — the one-sided
+    ablation the joins benchmark measures against).
+    """
+    import itertools as _it
+
+    from repro.streaming.joins import (LEFT, RIGHT, IntervalJoinOp,
+                                       JoinLookaheadOp, WindowedJoinOp)
+    from repro.streaming.windows import WindowAssigner
+
+    if cfg.oo_bound <= 0:
+        raise ValueError("join queries need cfg.oo_bound > 0 "
+                         "(event-time watermarks drive retention/firing)")
+    if join_hints not in ("one", "two"):
+        raise ValueError(f"join_hints {join_hints!r}")
+
+    eng = _mk_engine()
+    gen = NexmarkGen(cfg)
+    lateness = 0.0 if allowed_lateness is None else float(allowed_lateness)
+
+    if query == "q8":
+        want = {PERSON, AUCTION}
+        size = 2.0 if window_size is None else window_size
+        assigner = WindowAssigner(size)
+        state_size = 160                  # person record + auction id list
+
+        def side_of(p):
+            return LEFT if p["type"] == PERSON else RIGHT
+
+        def key_of(tup: Tuple_):
+            p = tup.payload
+            if p["type"] == PERSON:
+                return p["person"]
+            if p["type"] == AUCTION:
+                return p["seller"]
+            return None
+
+        def join_fn(key, persons, auctions):
+            # person registered and opened >= 1 auction in this window
+            return ("active_seller", key, len(auctions))
+        # the probe side (one-sided ablation) is the auction stream: it
+        # dominates the keyed traffic and names the seller directly
+        hint_sides = (LEFT, RIGHT) if join_hints == "two" else (RIGHT,)
+    elif query == "q20":
+        want = {AUCTION, BID}
+        horizon = cfg.active_window if join_horizon is None \
+            else float(join_horizon)
+        bounds = (0.0, horizon)           # bid.ts - auction.ts in [0, hor]
+        state_size = 700                  # auction record + live bid tail
+
+        def side_of(p):
+            return LEFT if p["type"] == AUCTION else RIGHT
+
+        def key_of(tup: Tuple_):
+            p = tup.payload
+            return p["auction"] if p["type"] in want else None
+
+        def join_fn(key, auction, bid):
+            # the category filter must also guard the PROBE path: an
+            # out-of-order non-cat-10 auction arriving after its bids
+            # would otherwise enrich the buffered bids keep_fn kept
+            return (bid, auction) if auction["category"] == 10 else None
+
+        def keep_fn(side, p):
+            # the category filter runs before the buffer on the build
+            # side (Flink's q20 plan); bids buffer within retention so a
+            # late/out-of-order auction still finds its early bids
+            return side == RIGHT or p["category"] == 10
+        hint_sides = (LEFT, RIGHT) if join_hints == "two" else (RIGHT,)
+    else:
+        raise KeyError(query)
+
+    def type_filter(tup: Tuple_):
+        return tup if tup.payload["type"] in want else None
+
+    def rekey(tup: Tuple_):
+        k = key_of(tup)
+        if k is not None:
+            tup.key = k
+        return tup
+
+    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
+                           gen, watermark_interval=cfg.watermark_interval,
+                           oo_bound=cfg.oo_bound))
+    parse = eng.add(MapOp(eng, "parser", parallelism, fn=type_filter,
+                          service_time=15e-6))
+    la_kw = dict(fn=rekey, hint_sides=hint_sides, hint_ts_mode=hint_ts,
+                 allowed_lateness=lateness, service_time=10e-6,
+                 cms_conf=cms_conf)
+    if query == "q8":
+        lookahead = eng.add(JoinLookaheadOp(
+            eng, "join_lookahead", parallelism, side_of, key_of,
+            assigner=assigner, burst_ahead=2 * cfg.watermark_interval,
+            **la_kw))
+    else:
+        # build-side hints protect across the out-of-orderness slack in
+        # which the first probe arrives (JoinLookaheadOp docstring)
+        lookahead = eng.add(JoinLookaheadOp(
+            eng, "join_lookahead", parallelism, side_of, key_of,
+            bounds=bounds, probe_ahead=cfg.oo_bound, **la_kw))
+    plane = None
+    if n_shards is not None:
+        from repro.streaming.shards import ShardPlane
+        plane = ShardPlane(n_shards, parallelism)
+    # the single lookahead must stay active to be a fair ablation, so
+    # the per-origin mismatch discard is off (miss_threshold > 1, as the
+    # windowed queries do, §10); q8 panes carry fire deadlines and use
+    # deadline-aware eviction, while interval retention deadlines are
+    # LAST-access bounds — min-ts protection is the right reading there
+    # (Belady applies only when the deadline IS the next access, §11)
+    if query == "q8":
+        join = eng.add(WindowedJoinOp(
+            eng, "join", parallelism, assigner, side_of, join_fn, backend,
+            cache_entries * state_size, allowed_lateness=lateness,
+            late_policy="drop" if lateness == 0 else "update",
+            policy=policy, mode=mode, io_workers=io_workers,
+            state_size=state_size, miss_threshold=1.01,
+            deadline_aware=(hint_ts == "deadline"), shards=plane))
+    else:
+        join = eng.add(IntervalJoinOp(
+            eng, "join", parallelism, side_of, join_fn, bounds, backend,
+            cache_entries * state_size, allowed_lateness=lateness,
+            keep_fn=keep_fn, out_size=400, policy=policy, mode=mode,
+            io_workers=io_workers, state_size=state_size,
+            miss_threshold=1.01, shards=plane))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+
+    from repro.streaming.engine import BUFFER_TIMEOUT
+    to = BUFFER_TIMEOUT if buffer_timeout is None else buffer_timeout
+    rr = _it.count()
+    eng.connect(src, parse, partition=lambda k, n: next(rr) % n, timeout=to)
+    rr2 = _it.count()
+    eng.connect(parse, lookahead, partition=lambda k, n: next(rr2) % n,
+                timeout=to)
+    eng.connect(lookahead, join,
+                partition=plane.route_data if plane else hash_partition,
+                timeout=to)
+    eng.connect(join, sink, partition=lambda k, n: 0, timeout=to)
+    if mode == "prefetch":
+        eng.register_prefetching(join, [lookahead])
     return eng

@@ -47,7 +47,7 @@ FIRE = _Fire()
 
 
 class WindowAssigner:
-    """Tumbling/sliding event-time windows.
+    """Tumbling/sliding event-time window membership (DESIGN.md §10).
 
     Window ``wid`` covers ``[wid * slide, wid * slide + size)``; a
     timestamp belongs to ``size / slide`` windows (1 for tumbling).
@@ -76,7 +76,9 @@ class WindowAssigner:
 
 
 class WindowedStatefulOp(StatefulOp):
-    """Keyed windowed aggregation on the stateful-operator machinery.
+    """Keyed windowed aggregation on the stateful-operator machinery
+    (DESIGN.md §10; the co-grouped windowed JOIN of §11 subclasses this
+    with a two-sided pane accumulator).
 
     Each incoming tuple expands into one state access per target pane
     (``WindowKey(key, wid)``) and flows through the inherited sync/async/
@@ -322,7 +324,9 @@ class WindowedStatefulOp(StatefulOp):
 
 
 class WindowedLookaheadOp(MapOp):
-    """Windowed Hint Extractor (DESIGN.md §10).
+    """Windowed Hint Extractor (DESIGN.md §10; the two-sided join
+    lookahead of §11 subclasses this, reusing the pane-deadline and
+    burst machinery for windowed joins).
 
     Per tuple: one hint per target pane, keyed ``WindowKey(key, wid)``.
     ``hint_ts_mode`` picks the hint's access-timestamp semantics:

@@ -82,3 +82,39 @@ def test_evict_expired_reclaims_fired_panes():
     assert not bool(np.asarray(state.dirty).any())
     state, n = tac_jax.evict_expired(state, 6.0)     # idempotent
     assert int(n) == 0
+
+
+def test_evict_expired_retention_expires_by_interval_end():
+    """Interval-join entries (DESIGN.md §11) are admitted at their
+    insertion/access ts but stay matchable until ts + retention: expiry
+    must use the INTERVAL END, not the insertion time."""
+    state = tac_jax.init(2, 4, 4)
+    keys = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    state = tac_jax.admit(state, keys, jnp.asarray([1., 5., 9., 12.]),
+                          jnp.ones((4, 4)))
+    # plain ts < 6.0 would reclaim keys 1 and 2; with retention=5 only
+    # key 1 (interval end 6.0, not strictly behind 6.0... end 1+5=6) —
+    # nothing expires at wm=6.0, key 1 expires at wm=6.5
+    state, n = tac_jax.evict_expired(state, 6.0, retention=5.0)
+    assert int(n) == 0
+    state, n = tac_jax.evict_expired(state, 6.5, retention=5.0)
+    assert int(n) == 1
+    _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(4))
+    assert list(np.asarray(hit)) == [False, True, True, True]
+
+
+def test_evict_expired_per_slot_retention():
+    """Per-slot retention (side-dependent interval bounds): a [n_buckets,
+    ways] array applies each slot's own bound."""
+    state = tac_jax.init(1, 4, 2)
+    keys = jnp.asarray([1, 2], jnp.int32)
+    state = tac_jax.admit(state, keys, jnp.asarray([10., 10.]),
+                          jnp.ones((2, 2)))
+    ret = np.zeros((1, 4), np.float32)
+    kslots = np.asarray(state.keys)[0]
+    ret[0, list(kslots).index(1)] = 0.0       # left: expires at 10
+    ret[0, list(kslots).index(2)] = 8.0       # right: expires at 18
+    state, n = tac_jax.evict_expired(state, 15.0, retention=jnp.asarray(ret))
+    assert int(n) == 1
+    _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(2))
+    assert list(np.asarray(hit)) == [False, True]

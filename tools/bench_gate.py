@@ -9,7 +9,10 @@ its headline advantage on the (smoke) config it was run with:
   * windowing (``BENCH_windowing*.json``): for every query present,
     ``deadline.p99`` must be <= ``ondemand.p99`` (and is also reported
     against ``arrival``, informationally — the smoke config is small
-    enough that only the on-demand bound is load-bearing).
+    enough that only the on-demand bound is load-bearing);
+  * joins (``BENCH_joins*.json``): for every query present,
+    ``twosided.p99`` must be <= ``ondemand.p99`` (``onesided`` is
+    reported informationally, same rationale).
 
 Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
 """
@@ -56,6 +59,27 @@ def gate_windowing(data: dict, fails: list, name: str) -> None:
                          f"on-demand ({od['p99']:.4f}s)")
 
 
+def gate_joins(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        rs = data[q]
+        two, od = rs.get("twosided"), rs.get("ondemand")
+        if not two or not od:
+            fails.append(f"{name}: {q} missing twosided/ondemand results")
+            continue
+        ok = two["p99"] <= od["p99"]
+        one = rs.get("onesided")
+        extra = (f", onesided {one['p99']*1e3:.2f}ms" if one else "")
+        print(f"  joins {q}: twosided p99 {two['p99']*1e3:.2f}ms vs "
+              f"on-demand {od['p99']*1e3:.2f}ms{extra} -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} twosided p99 ({two['p99']:.4f}s) > "
+                         f"on-demand ({od['p99']:.4f}s)")
+
+
 def main(argv) -> int:
     if not argv:
         print("usage: bench_gate.py BENCH_*.json ...")
@@ -77,6 +101,8 @@ def main(argv) -> int:
             gate_serving(data, fails, name)
         elif "windowing" in name:
             gate_windowing(data, fails, name)
+        elif "joins" in name:
+            gate_joins(data, fails, name)
         else:
             fails.append(f"{name}: no gate rule for this artifact")
     if fails:

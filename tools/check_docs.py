@@ -6,8 +6,13 @@ Fails when:
     that does not exist;
   * ``README.md`` references a ``BENCH_*.json`` artifact that is not
     checked in at the repo root;
+  * a checked-in ``BENCH_*.json`` is NOT referenced from ``README.md``
+    (every artifact must appear in the regeneration table);
   * ``README.md`` references a module path (``repro.x.y``) or a
     repo-relative file path in backticks that does not exist;
+  * a ``DESIGN.md §N`` citation in any ``.py`` file (src/, tools/,
+    benchmarks/, tests/, examples/) names a section with no matching
+    ``## §N`` heading in ``DESIGN.md``;
   * a checked-in ``BENCH_*.json`` is unparseable, empty, or missing its
     ``config`` block / result entries (schema check);
   * ``CHANGES.md`` lacks an entry for the current PR number (taken from
@@ -71,6 +76,41 @@ def check_readme(readme: Path, fails: list) -> None:
             fails.append(f"README.md: path `{code}` does not exist")
 
 
+CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.M)
+PY_DIRS = ("src", "tools", "benchmarks", "tests", "examples")
+
+
+def check_design_citations(fails: list) -> int:
+    """Every ``DESIGN.md §N`` citation in a ``.py`` file must resolve to
+    a real ``## §N`` section heading of DESIGN.md."""
+    design = ROOT / "DESIGN.md"
+    sections = set(SECTION_RE.findall(design.read_text())) \
+        if design.exists() else set()
+    n_cites = 0
+    for d in PY_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            for num in CITE_RE.findall(py.read_text()):
+                n_cites += 1
+                if num not in sections:
+                    fails.append(
+                        f"{py.relative_to(ROOT)}: cites DESIGN.md §{num}, "
+                        f"but DESIGN.md has no '## §{num}' heading")
+    if design.exists() and not sections:
+        fails.append("DESIGN.md: no '## §N' section headings found")
+    return n_cites
+
+
+def check_bench_referenced(readme: Path, fails: list) -> None:
+    """Every checked-in BENCH_*.json must be referenced from README.md
+    (the regeneration table is the contract for how to rebuild it)."""
+    text = readme.read_text() if readme.exists() else ""
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        if path.name not in text:
+            fails.append(f"{path.name}: checked in but never referenced "
+                         f"from README.md — add a regeneration-table row")
+
+
 def check_bench_schemas(fails: list) -> int:
     """Every checked-in BENCH_*.json must be parseable, non-empty, carry a
     ``config`` block, and at least one non-config result entry."""
@@ -121,7 +161,9 @@ def main() -> int:
     readme = ROOT / "README.md"
     if readme.exists():
         check_readme(readme, fails)
+    check_bench_referenced(readme, fails)
     n_bench = check_bench_schemas(fails)
+    n_cites = check_design_citations(fails)
     check_changes(fails)
     if fails:
         print("docs check FAILED:")
@@ -129,7 +171,7 @@ def main() -> int:
             print(f"  - {f}")
         return 1
     print(f"docs check OK ({len(md_files)} markdown files, "
-          f"{n_bench} BENCH artifacts)")
+          f"{n_bench} BENCH artifacts, {n_cites} DESIGN citations)")
     return 0
 
 
