@@ -12,11 +12,45 @@ def main() -> None:
                     help="comma list: fig6,fig7,fig8,fig9,fig10,fig11,"
                          "tab1,tab2,roofline,claims")
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--fail-at", type=float, default=None,
+                    help="run the failure/recovery scenario instead of the "
+                         "paper figures: inject a failure this many seconds "
+                         "after warmup on q5 and q20 (DESIGN.md §7)")
+    ap.add_argument("--recover", default="warmed,cold",
+                    help="comma list of recovery modes to run with "
+                         "--fail-at (warmed|cold)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)              # `benchmarks` package itself
     from benchmarks import paper, roofline
+
+    if args.fail_at is not None:
+        from benchmarks import recovery as rbench
+        modes = args.recover.split(",")
+        bad = [m for m in modes if m not in ("warmed", "cold")]
+        if bad:
+            ap.error(f"--recover modes must be warmed|cold, got {bad}")
+        os.makedirs(args.out, exist_ok=True)
+        rows = ["name,us_per_call,derived"]
+        for query in ("q5", "q20"):
+            qcfg = dict(rbench.FULL[query], fail_at=args.fail_at)
+            for mode in modes:
+                r = rbench.run_one(query, mode, qcfg)
+                spike = r.get("post_restore_p99") or 0.0
+                rows.append(
+                    f"recovery_{query}_{mode},{spike*1e6:.1f},"
+                    f"steady_p99_us={(r['steady_p99'] or 0)*1e6:.1f};"
+                    f"recovery_s={r.get('recovery_time', 0):.3f};"
+                    f"warmup_hints={r.get('warmup_hints', 0)}")
+                print(rows[-1], file=sys.stderr)
+        csv = "\n".join(rows)
+        print(csv)
+        with open(os.path.join(args.out, "recovery.csv"), "w") as f:
+            f.write(csv + "\n")
+        return
 
     os.makedirs(args.out, exist_ok=True)
     rows = ["name,us_per_call,derived"]

@@ -8,7 +8,17 @@ hints on a side channel, and the Timestamp-Aware Cache stages the card state
 before the transaction arrives.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+The fault-tolerance plane (DESIGN.md §7) is runnable from here too:
+
+    PYTHONPATH=src python examples/quickstart.py --fail-at 3.0 --recover warmed
+
+takes barrier-aligned checkpoints, kills the job mid-run, and recovers
+from the last completed epoch — ``warmed`` replays the logged hint
+stream to pre-stage the hot cards before the data replay, ``cold`` shows
+the on-demand post-restore latency spike it avoids.
 """
+import argparse
 import os
 import random
 import sys
@@ -21,7 +31,7 @@ from repro.streaming.engine import (Engine, MapOp, SinkOp, SourceOp,
 from repro.streaming.events import Tuple_
 
 
-def build(policy: str, mode: str) -> Engine:
+def build(policy: str, mode: str, replayable: bool = False) -> Engine:
     eng = Engine()
     rng = random.Random(1)
     n_cards = 200_000
@@ -45,7 +55,8 @@ def build(policy: str, mode: str) -> Engine:
         return hist, [Tuple_(tup.ts, tup.key, {"score": score}, 64,
                              tup.ingest_t)]
 
-    src = eng.add(SourceOp(eng, "source", 1, 20_000, gen))
+    src = eng.add(SourceOp(eng, "source", 1, 20_000, gen,
+                           replayable=replayable))
     extract = eng.add(MapOp(eng, "extract", 2, service_time=12e-6,
                             key_of=key_of))
     normalize = eng.add(MapOp(eng, "normalize", 2, service_time=8e-6,
@@ -66,6 +77,44 @@ def build(policy: str, mode: str) -> Engine:
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fail-at", type=float, default=None,
+                    help="inject a whole-job failure this many seconds "
+                         "AFTER warmup (same clock as benchmarks/run.py "
+                         "--fail-at); enables checkpointing + replayable "
+                         "source")
+    ap.add_argument("--recover", choices=("warmed", "cold"),
+                    default="warmed",
+                    help="recovery mode after --fail-at: 'warmed' replays "
+                         "the hint log before the data path resumes")
+    ap.add_argument("--checkpoint-interval", type=float, default=0.5)
+    args = ap.parse_args()
+
+    if args.fail_at is not None:
+        from repro.streaming.recovery import (CheckpointCoordinator,
+                                              inject_failure_at)
+        warmup = 1.0
+        t_fail = warmup + args.fail_at
+        print(f"fraud-detection quickstart with a failure "
+              f"{args.fail_at}s after warmup ({args.recover} recovery)")
+        eng = build("tac", "prefetch", replayable=True)
+        coord = CheckpointCoordinator(eng,
+                                      interval=args.checkpoint_interval)
+        coord.start()
+        inject_failure_at(eng, at=t_fail, mode=args.recover)
+        m = eng.run(duration=max(6.0, args.fail_at + 3.0), warmup=warmup)
+        ck, rec = m.get("checkpoint", {}), m.get("recovery", {})
+        print(f"  p50={m['p50']*1e3:7.2f}ms p999={m['p999']*1e3:8.2f}ms "
+              f"cache-hit={m.get('stateful_hit_rate', 0):.3f}")
+        print(f"  epochs completed={ck.get('epochs_completed')} "
+              f"align-stall max={ck.get('align_stall_max', 0)*1e3:.2f}ms")
+        print(f"  recovered from epoch {rec.get('last_epoch')} in "
+              f"{rec.get('last_downtime', 0)*1e3:.1f}ms "
+              f"(restore {rec.get('last_restore_bytes', 0)} B, "
+              f"{rec.get('warmup_hints', 0)} warmup hints, "
+              f"{rec.get('replayed', 0)} tuples replayed)")
+        return
+
     print("fraud-detection quickstart (6s simulated stream, 20k tx/s)")
     for label, policy, mode in [("cache-only (sync)", "lru", "sync"),
                                 ("async I/O", "lru", "async"),

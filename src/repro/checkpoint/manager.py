@@ -29,12 +29,58 @@ def _flatten(tree: Any) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
     return flat, treedef
 
 
+class AsyncAtomicWriter:
+    """The write discipline shared by the training CheckpointManager and
+    the streaming SnapshotStore (DESIGN.md §7): at most ONE background
+    write in flight at a time, each write lands in a hidden temp dir and
+    is published only via atomic rename — a crash mid-write can never
+    corrupt a restore point."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.writes = 0
+
+    def submit(self, final_name: str, write_fn, blocking: bool = False,
+               after=None) -> None:
+        """``write_fn(tmp_dir)`` fills a temp dir; it is renamed to
+        ``final_name`` on success; ``after()`` runs post-publication
+        (retention GC hooks)."""
+        self.wait()                       # one in-flight write at a time
+
+        def _run():
+            tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+            try:
+                write_fn(tmp)
+                final = os.path.join(self.dir, final_name)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                if after is not None:
+                    after()
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+
+        self.writes += 1
+        if blocking:
+            _run()
+        else:
+            self._thread = threading.Thread(target=_run, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
-        os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._writer = AsyncAtomicWriter(directory)
         self.saves = 0
 
     # ------------------------------------------------------------------ save
@@ -49,35 +95,19 @@ class CheckpointManager:
             "dtypes": [str(v.dtype) for _, v in flat],
             "extra": extra or {},
         }
-        self.wait()                       # one in-flight save at a time
 
-        def _write():
-            tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
-            try:
-                np.savez(os.path.join(tmp, "shard_0.npz"),
-                         **{k: v for k, v in flat})
-                with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                    json.dump(manifest, f)
-                final = os.path.join(self.dir, f"step_{step:08d}")
-                if os.path.exists(final):
-                    shutil.rmtree(final)
-                os.rename(tmp, final)
-                self._gc()
-            finally:
-                if os.path.exists(tmp):
-                    shutil.rmtree(tmp, ignore_errors=True)
+        def _write(tmp):
+            np.savez(os.path.join(tmp, "shard_0.npz"),
+                     **{k: v for k, v in flat})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
 
         self.saves += 1
-        if blocking:
-            _write()
-        else:
-            self._thread = threading.Thread(target=_write, daemon=True)
-            self._thread.start()
+        self._writer.submit(f"step_{step:08d}", _write, blocking=blocking,
+                            after=self._gc)
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        self._writer.wait()
 
     def _gc(self) -> None:
         steps = self.list_steps()

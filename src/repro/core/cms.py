@@ -50,6 +50,13 @@ class CountMinFilter:
                       % _PRIMES[i]) % w
         return out
 
+    def reset(self) -> None:
+        """Zero all counters (process-restart semantics, DESIGN.md §7:
+        CMS frequency state is soft and re-learns after a crash).  The
+        cached flat view aliases ``counters``, so zero in place."""
+        self.counters[:] = 0
+        self._since_aging = 0
+
     def update_and_classify(self, key: int) -> bool:
         """Count one occurrence; return True iff the key is (now) hot."""
         flat = self._flat

@@ -64,6 +64,17 @@ class _BaseCache:
             self._hand = []               # clock hand invalidated by removal
         return out
 
+    def import_entries(self, entries, now_ts=0.0) -> int:
+        """Inverse of ``export_entries`` (migration re-admit §9, snapshot
+        restore roundtrips §7 — DESIGN.md).  ``_E`` carries no timestamp;
+        LRU/Clock order is positional, and ``export_entries`` drains in
+        recency order (oldest first), so re-inserting in export order
+        reproduces the relative eviction order.  Dirty bits ride along."""
+        for e in entries:
+            self.insert(e.key, e.state, getattr(e, "ts", now_ts),
+                        dirty=e.dirty, size=e.size)
+        return len(entries)
+
     def flush_dirty(self) -> List[_E]:
         out = [e for e in self._iter_entries() if e.dirty]
         out += list(self.evict_buffer.values())

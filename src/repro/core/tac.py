@@ -246,6 +246,20 @@ class TimestampAwareCache:
             out.append(self.evict_buffer.pop(key))
         return out
 
+    def import_entries(self, entries: List[Entry],
+                       now_ts: float = 0.0) -> int:
+        """Inverse of ``export_entries`` (migration re-admit §9, snapshot
+        restore roundtrips §7 — DESIGN.md): re-insert exported entries
+        preserving their timestamps and dirty bits, so the destination
+        cache reproduces the SAME eviction order (including the
+        deadline-aware order — ordering is a pure function of entry
+        timestamps and the clock).  Entries without a timestamp (LRU/
+        Clock exports crossing policies) enter at ``now_ts``."""
+        for e in entries:
+            self.insert(e.key, e.state, getattr(e, "ts", now_ts),
+                        dirty=e.dirty, size=e.size)
+        return len(entries)
+
     def pop_writeback(self) -> Optional[Entry]:
         """State thread pool: take one dirty entry to write to the backend."""
         if not self.evict_buffer:

@@ -15,7 +15,7 @@ serving arena's write-back path needs them).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -317,6 +317,35 @@ def import_entries(state: TACState, keys: np.ndarray, ts: np.ndarray,
     return admit_batch(state, keys, jnp.asarray(ts, jnp.float32),
                        None if vals is None else jnp.asarray(vals),
                        None if dirty is None else jnp.asarray(dirty, bool))
+
+
+def flush_dirty(state: TACState) -> Tuple[TACState, Exported]:
+    """Barrier-time dirty export (DESIGN.md §7): the device twin of
+    ``TimestampAwareCache.flush_dirty``.  Returns every DIRTY resident
+    row (keys, timestamps, values, flat slots — the write-back batch the
+    checkpoint persists) and the state with those dirty bits CLEARED;
+    unlike the migration drain (``export_mask``) the entries stay
+    resident — a checkpoint snapshots state, it does not evict it.
+    Host-side like the other bulk paths: checkpoints are rare and run
+    off the tuple path."""
+    dirty = np.asarray(state.dirty) & (np.asarray(state.keys) >= 0)
+    if not dirty.any():
+        return state, Exported(state, np.zeros((0,), np.int32),
+                               np.zeros((0,), np.float32),
+                               np.zeros((0, state.vals.shape[-1]),
+                                        np.float32),
+                               np.zeros((0,), bool),
+                               np.zeros((0,), np.int32))
+    b, w = np.nonzero(dirty)
+    slots = (b * state.keys.shape[1] + w).astype(np.int32)
+    new_state = state._replace(dirty=state.dirty.at[b, w].set(False))
+    exp = Exported(new_state,
+                   np.asarray(state.keys)[dirty].astype(np.int32),
+                   np.asarray(state.ts)[dirty].astype(np.float32),
+                   np.asarray(state.vals)[dirty],
+                   np.ones((int(dirty.sum()),), bool),
+                   slots)
+    return new_state, exp
 
 
 def set_dirty(state: TACState, keys: jax.Array,

@@ -7,8 +7,9 @@ ratios, write-back volume) is real and only the clock is simulated.
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Set, Tuple
 
 
 @dataclass(frozen=True)
@@ -41,6 +42,15 @@ class StateBackend:
         self.writes = 0
         self.bytes_read = 0
         self.bytes_written = 0
+        # incremental-checkpoint delta (DESIGN.md §7): keys materialized/
+        # written and keys deleted since the last snapshot_delta() cut.
+        # Tracking is OFF until a CheckpointCoordinator attaches (it must
+        # attach before data flows so the first epoch's delta covers all
+        # state) — otherwise the tombstone set would grow without bound
+        # in runs that never checkpoint
+        self.track_deltas = False
+        self._epoch_dirty: Set[Any] = set()
+        self._epoch_deleted: Set[Any] = set()
 
     NEGATIVE_LOOKUP = 20e-6   # bloom-filter fast path for absent keys
 
@@ -64,30 +74,88 @@ class StateBackend:
         self.reads += 1
         self.bytes_read += size
         if key not in self.data and self.default_factory is not None:
+            # first touch materializes state: it belongs to the epoch's
+            # delta like any other write (DESIGN.md §7)
             self.data[key] = self.default_factory(key)
+            if self.track_deltas:
+                self._epoch_dirty.add(key)
+                self._epoch_deleted.discard(key)
         return self.data.get(key)
 
     def write(self, key: Any, value: Any, size: int = 200) -> None:
         self.writes += 1
         self.bytes_written += size
         self.data[key] = value
+        if self.track_deltas:
+            self._epoch_dirty.add(key)
+            self._epoch_deleted.discard(key)
 
     def delete(self, key: Any) -> bool:
         """Drop a key (fired-window purge, DESIGN.md §10).  Tombstone
         writes are cheap and batched in real stores, so this is not
-        charged as workload I/O."""
-        return self.data.pop(key, None) is not None
+        charged as workload I/O.  The tombstone IS logged in the epoch
+        delta (§7): an incremental restore must not resurrect the key."""
+        if self.data.pop(key, None) is not None:
+            if self.track_deltas:
+                self._epoch_deleted.add(key)
+                self._epoch_dirty.discard(key)
+            return True
+        return False
 
     # ------------------------------------------------------ shard migration
     def export_keys(self, pred) -> Dict[Any, Any]:
         """Migration handoff (DESIGN.md §9): pop every entry whose key
         satisfies ``pred``.  The authoritative copy of a migrating shard
         moves with it; the bulk transfer runs off the tuple path, so read/
-        write counters (workload I/O) are not charged."""
-        return {k: self.data.pop(k) for k in [k for k in self.data
-                                              if pred(k)]}
+        write counters (workload I/O) are not charged.  The departures are
+        logged as epoch-delta tombstones (§7) so an incremental snapshot of
+        THIS partition stops covering the moved keys."""
+        out = {}
+        for k in [k for k in self.data if pred(k)]:
+            out[k] = self.data.pop(k)
+            if self.track_deltas:
+                self._epoch_deleted.add(k)
+                self._epoch_dirty.discard(k)
+        return out
 
     def import_keys(self, items: Dict[Any, Any]) -> int:
-        """Land a migration export in this backend's partition."""
+        """Land a migration export in this backend's partition (logged as
+        epoch-delta writes, DESIGN.md §7)."""
         self.data.update(items)
+        if self.track_deltas:
+            self._epoch_dirty.update(items)
+            self._epoch_deleted.difference_update(items)
         return len(items)
+
+    # ------------------------------------------------- checkpoint (§7)
+    def snapshot_delta(self) -> Tuple[Dict[Any, Any], Set[Any]]:
+        """Barrier-time incremental export (DESIGN.md §7): deep copies of
+        every entry written since the last cut, plus the tombstone set.
+        Deep copies because operators mutate hot state in place (§11) —
+        a shallow snapshot would keep mutating after the barrier.  Like
+        the migration drain, the export runs off the tuple path and is
+        metered as snapshot bytes, not workload reads; the restore of
+        these bytes IS charged at backend speed (streaming/recovery.py).
+        """
+        delta = {k: copy.deepcopy(self.data[k])
+                 for k in self._epoch_dirty if k in self.data}
+        deleted = set(self._epoch_deleted)
+        self._epoch_dirty.clear()
+        self._epoch_deleted.clear()
+        return delta, deleted
+
+    def restore_snapshot(self, items: Dict[Any, Any]) -> int:
+        """Recovery (DESIGN.md §7): replace this partition with the
+        materialized snapshot state.  The caller charges the bulk read at
+        backend speed (no free reads on the restore path)."""
+        self.data = dict(items)
+        self._epoch_dirty.clear()
+        self._epoch_deleted.clear()
+        return len(self.data)
+
+    def reset(self) -> None:
+        """Failure handling: drop the (volatile stand-in) partition before
+        restore re-imports the durable snapshot."""
+        self.data.clear()
+        self._epoch_dirty.clear()
+        self._epoch_deleted.clear()

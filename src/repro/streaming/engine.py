@@ -59,6 +59,18 @@ class Sim:
             fn(*args)
         self.t = max(self.t, t_end)
 
+    def purge(self, pred: Callable[[Tuple], bool]) -> int:
+        """Drop scheduled events matching ``pred((t, seq, fn, args))`` —
+        the failure-injection path (DESIGN.md §7) uses this to kill the
+        dead incarnation's pending callbacks (service completions, I/O
+        completions, source ticks) so they cannot fire into the restored
+        state."""
+        kept = [ev for ev in self._heap if not pred(ev)]
+        n = len(self._heap) - len(kept)
+        heapq.heapify(kept)
+        self._heap = kept
+        return n
+
 
 class Channel:
     """One src_op -> dst_op edge with per-(src,dst)-subtask network buffers.
@@ -89,11 +101,24 @@ class Channel:
         self.bufs: Dict[Tuple[int, int], List] = defaultdict(list)
         self.buf_bytes: Dict[Tuple[int, int], int] = defaultdict(int)
         self.flush_scheduled: Dict[Tuple[int, int], bool] = defaultdict(bool)
+        self.last_arrival: Dict[Tuple[int, int], float] = defaultdict(float)
         self.bytes_sent = 0
         self.msgs_sent = 0
 
     def send(self, src_sub: int, msg: Any) -> None:
-        if isinstance(msg, (Marker, CheckpointBarrier)):
+        if isinstance(msg, CheckpointBarrier):
+            # barriers broadcast and flush like markers, but are tagged
+            # with the (channel, src subtask) input they travelled on so
+            # the destination can ALIGN across all its inputs (DESIGN.md
+            # §7); flushing keeps each copy ordered behind the pre-barrier
+            # records it covers
+            for d in range(self.dst.parallelism):
+                self.bufs[(src_sub, d)].append(
+                    CheckpointBarrier(msg.checkpoint_id,
+                                      origin=(self.chan_id, src_sub)))
+                self._flush(src_sub, d)
+            return
+        if isinstance(msg, Marker):
             # control messages are broadcast and flush the buffer (order!)
             for d in range(self.dst.parallelism):
                 self.bufs[(src_sub, d)].append(msg)
@@ -135,7 +160,15 @@ class Channel:
         self.bytes_sent += nbytes + 8 * len(batch)
         self.msgs_sent += len(batch)
         delay = NET_LATENCY + NET_PER_MSG * len(batch)
-        self.sim.after(delay, self.dst.deliver_batch, d, batch)
+        # the per-message term makes a small batch faster than a LARGE
+        # batch flushed just before it; a TCP-like channel never reorders,
+        # so clamp arrival to per-(src,dst)-pair FIFO — watermarks and
+        # checkpoint barriers (§7, §10) rely on never overtaking the
+        # records they cover
+        arrive = max(self.sim.t + delay, self.last_arrival[(s, d)])
+        self.last_arrival[(s, d)] = arrive
+        self.sim.at(arrive, self.dst.deliver_batch, d, batch,
+                    (self.chan_id, s))
 
 
 # hash_partition lives in repro.streaming.shards (one canonical definition
@@ -170,6 +203,12 @@ class Operator:
         self.plan_pos = 0
         self.processed = 0
         self._barrier_seen = set()
+        # barrier alignment state (DESIGN.md §7): per-subtask active
+        # alignment {epoch, arrived origins, buffered post-barrier msgs,
+        # t0}; barrier_expected counts data-edge (channel, src subtask)
+        # inputs, maintained by Engine.connect alongside wm_expected
+        self._align: List[Optional[dict]] = [None] * parallelism
+        self.barrier_expected = 0
         # event-time watermark state (DESIGN.md §10): per-subtask current
         # watermark, last value seen per input (channel, src subtask), and
         # the number of inputs that must report before the min is valid
@@ -180,9 +219,69 @@ class Operator:
         self.wm_expected = 0
 
     # ------------------------------------------------------------- plumbing
-    def deliver_batch(self, sub: int, batch: List[Any]) -> None:
-        self.queues[sub].extend(batch)
-        self._kick(sub)
+    def deliver_batch(self, sub: int, batch: List[Any],
+                      origin: Any = None) -> None:
+        """``origin`` identifies the (channel, src subtask) a network
+        batch travelled on; engine-internal deliveries (self-addressed
+        FIRE messages, shard forwarding, migration replay, recovery
+        re-delivery) pass None and bypass barrier alignment."""
+        if origin is not None and self.barrier_expected > 0 \
+                and self.engine.barriers_active and (
+                self._align[sub] is not None
+                or any(isinstance(m, CheckpointBarrier) for m in batch)):
+            # only pay the filter when checkpointing is in use AND an
+            # alignment is open or a barrier is arriving — the common
+            # no-checkpoint batch passes through untouched
+            batch = self._align_filter(sub, batch, origin)
+        if batch:
+            self.queues[sub].extend(batch)
+            self._kick(sub)
+
+    def _align_filter(self, sub: int, batch: List[Any],
+                      origin: Any) -> List[Any]:
+        """Aligned-barrier protocol (DESIGN.md §7), run at delivery time.
+
+        The first barrier copy of an epoch opens an alignment: from then
+        on, messages from inputs whose barrier already arrived are
+        POST-barrier and get buffered.  When the last expected input
+        reports, an ``_AlignedBarrier`` sentinel is enqueued (behind all
+        pre-barrier messages — channels are FIFO, so everything still in
+        the queue is pre-barrier) followed by the buffered traffic.  One
+        epoch aligns at a time; the coordinator never overlaps epochs."""
+        out = []
+        for msg in batch:
+            al = self._align[sub]
+            if isinstance(msg, CheckpointBarrier):
+                if al is None:
+                    al = self._align[sub] = {
+                        "epoch": msg.checkpoint_id, "arrived": set(),
+                        "buffer": [], "t0": self.sim.t}
+                if origin in al["arrived"] \
+                        or msg.checkpoint_id != al["epoch"]:
+                    if origin in al["arrived"]:
+                        # a NEWER epoch's barrier from an already-aligned
+                        # input is post-barrier traffic: buffer it, and
+                        # the reprocessing below opens its alignment once
+                        # the current epoch completes (overlapping
+                        # triggers must not wedge the subtask)
+                        al["buffer"].append((origin, msg))
+                    continue              # else: stale copy, drop
+                al["arrived"].add(origin)
+                if len(al["arrived"]) >= self.barrier_expected:
+                    out.append(_AlignedBarrier(
+                        al["epoch"], self.sim.t - al["t0"],
+                        len(al["buffer"])))
+                    buffered = al["buffer"]
+                    self._align[sub] = None
+                    # buffered traffic re-enters the filter: it may carry
+                    # the NEXT epoch's barriers
+                    for o, m in buffered:
+                        out.extend(self._align_filter(sub, [m], o))
+            elif al is not None and origin in al["arrived"]:
+                al["buffer"].append((origin, msg))
+            else:
+                out.append(msg)
+        return out
 
     def _kick(self, sub: int) -> None:
         if not self.busy[sub] and (self.ready[sub] or self.queues[sub]):
@@ -245,19 +344,57 @@ class Operator:
         if isinstance(msg, Marker):
             self.on_marker(sub, msg)
             return 1e-7
+        if isinstance(msg, _AlignedBarrier):
+            return self._on_aligned_barrier(sub, msg)
         if isinstance(msg, CheckpointBarrier):
-            self.on_barrier(sub, msg)
-            return 1e-7
+            # barriers normally complete at delivery time (_align_filter);
+            # a barrier reaching handle() was injected without channel
+            # origin — treat it as a single-input alignment
+            if (msg.checkpoint_id, sub) in self._barrier_seen:
+                return 1e-7
+            self._barrier_seen.add((msg.checkpoint_id, sub))
+            return self._on_aligned_barrier(
+                sub, _AlignedBarrier(msg.checkpoint_id, 0.0, 0))
         self.processed += 1
         return self.process(sub, msg)
 
-    def on_barrier(self, sub: int, b: CheckpointBarrier) -> None:
-        # unaligned-checkpoint semantics: act on the first copy per subtask,
-        # drop duplicates arriving from other upstream subtasks
-        if (b.checkpoint_id, sub) in self._barrier_seen:
-            return
-        self._barrier_seen.add((b.checkpoint_id, sub))
-        self.emit(sub, b)
+    # ----------------------------------------------------------- checkpoint
+    def _on_aligned_barrier(self, sub: int, ab: _AlignedBarrier) -> float:
+        """The subtask reached the epoch's consistent cut (DESIGN.md §7):
+        snapshot local state, report to the engine/coordinator, forward
+        the barrier downstream."""
+        payload = self.snapshot_state(sub, ab.epoch)
+        self.engine.on_snapshot(ab.epoch, self.name, sub, payload,
+                                ab.stall, ab.buffered)
+        self.emit(sub, CheckpointBarrier(ab.epoch))
+        if payload is not None:
+            return 1e-6 * max(1, payload.get("n_flushed", 0))
+        return 1e-7
+
+    def snapshot_state(self, sub: int, epoch: int) -> Optional[dict]:
+        """Hook: return this subtask's durable snapshot payload (None for
+        stateless operators — they only align and forward).  Stateless
+        soft state (CMS counters, adaptation statistics) is deliberately
+        NOT snapshotted: a recorded deviation, see DESIGN.md §7."""
+        return None
+
+    def restore_extra(self, sub: int, extra: Optional[dict]) -> None:
+        """Hook: re-install operator-specific registries from a snapshot
+        payload's ``extra`` block (window registries §10, join retention
+        §11, shard-plane ownership §9)."""
+
+    def reset_volatile(self) -> None:
+        """Failure handling (DESIGN.md §7): discard everything a process
+        crash would lose — queues, watermark state, alignment state.
+        Subclasses drop caches, I/O lanes, and parked work on top."""
+        for s in range(self.parallelism):
+            self.queues[s].clear()
+            self.ready[s].clear()
+            self.busy[s] = False
+        self.wm = [float("-inf")] * self.parallelism
+        self._wm_in = [dict() for _ in range(self.parallelism)]
+        self._align = [None] * self.parallelism
+        self._barrier_seen.clear()
 
     def on_marker(self, sub: int, m: Marker) -> None:
         self.emit(sub, m)
@@ -289,6 +426,14 @@ class MapOp(Operator):
         if self.key_of is not None:
             self.emit_hint(sub, Marker(m.marker_id, lookahead_id=self.name))
         self.emit(sub, m)
+
+    def reset_volatile(self) -> None:
+        super().reset_volatile()
+        if self.cms is not None:
+            # CMS frequency counters are process-local soft state: a crash
+            # loses them and suppression re-learns (DESIGN.md §7)
+            for c in self.cms:
+                c.reset()
 
     def _emit_hints_for(self, sub: int, o: Tuple_) -> float:
         """Hint Extractor for one output tuple; returns the extraction
@@ -327,11 +472,23 @@ class SourceOp(Operator):
     edges — the promise that no tuple more than ``oo_bound`` behind the
     frontier will follow (the generator's late tail beyond the bound is
     exactly what the windowed late-data path handles).
+
+    With ``replayable=True`` the source models a DURABLE LOG in front of
+    the pipeline (a Kafka-style topic, DESIGN.md §7): the generator runs
+    on a LOGICAL clock (one ``interval`` per record, so the record
+    sequence is a pure function of position, independent of processing
+    stalls), every record is appended to ``log``, and recovery can
+    ``rewind`` a subtask to a checkpointed ``offset`` and replay —
+    first draining the log at ``replay_speedup`` x the live rate
+    (catch-up), then resuming live generation where the logical clock
+    left off.  Event timestamps come from the record (or the logical
+    clock), so a replayed stream carries the SAME event times and the
+    event-time results are reproducible across a failure.
     """
 
     def __init__(self, engine, name, parallelism, rate: float, gen,
                  service_time=1e-6, watermark_interval: float = 0.0,
-                 oo_bound: float = 0.0):
+                 oo_bound: float = 0.0, replayable: bool = False):
         super().__init__(engine, name, parallelism, service_time)
         self.rate = rate
         self.gen = gen
@@ -339,9 +496,20 @@ class SourceOp(Operator):
         self.watermark_interval = watermark_interval
         self.oo_bound = oo_bound
         self._max_ts = [float("-inf")] * parallelism
+        # durable-log state (replayable mode, DESIGN.md §7)
+        self.replayable = replayable
+        self.log: List[List] = [[] for _ in range(parallelism)]
+        self.log_base = [0] * parallelism      # offset of log[sub][0]
+        self.replay_pos = [0] * parallelism    # next position to emit
+        self.logical_t = [0.0] * parallelism
+        self.replay_speedup = 1.0
+        self.replayed = 0
+        self.replay_done_t = [None] * parallelism
+        self._interval = 1.0 / (rate / parallelism)
 
     def start(self) -> None:
         per = self.rate / self.parallelism
+        self._interval = 1.0 / per
         for s in range(self.parallelism):
             self.sim.after(1.0 / per * (s + 1) / self.parallelism,
                            self._tick, s, 1.0 / per)
@@ -349,20 +517,47 @@ class SourceOp(Operator):
                 self.sim.after(self.watermark_interval * (s + 1)
                                / self.parallelism, self._wm_tick, s)
 
+    def _emit_rec(self, sub: int, lt: float, rec) -> None:
+        now = self.sim.t
+        ts = rec[3] if len(rec) > 3 else (lt if self.replayable else now)
+        tup = Tuple_(ts=ts, key=rec[0], payload=rec[1], size=rec[2],
+                     ingest_t=now)
+        if ts > self._max_ts[sub]:
+            self._max_ts[sub] = ts
+        self.processed += 1
+        self.busy_time[sub] += self.service_time
+        self.emit(sub, tup)
+
     def _tick(self, sub: int, interval: float) -> None:
         if self.stopped:
+            return
+        if self.replayable:
+            end = self.log_base[sub] + len(self.log[sub])
+            if self.replay_pos[sub] < end:
+                # catch-up: re-emit logged records at replay speed
+                lt, rec = self.log[sub][self.replay_pos[sub]
+                                        - self.log_base[sub]]
+                self.replay_pos[sub] += 1
+                self.replayed += 1
+                self._emit_rec(sub, lt, rec)
+                if self.replay_pos[sub] >= end:
+                    self.replay_done_t[sub] = self.sim.t
+                self.sim.after(interval / self.replay_speedup,
+                               self._tick, sub, interval)
+                return
+            lt = self.logical_t[sub]
+            self.logical_t[sub] = lt + interval
+            rec = self.gen(lt)
+            if rec is not None:
+                self.log[sub].append((lt, rec))
+                self.replay_pos[sub] = end + 1
+                self._emit_rec(sub, lt, rec)
+            self.sim.after(interval, self._tick, sub, interval)
             return
         now = self.sim.t
         rec = self.gen(now)
         if rec is not None:
-            ts = rec[3] if len(rec) > 3 else now
-            tup = Tuple_(ts=ts, key=rec[0], payload=rec[1], size=rec[2],
-                         ingest_t=now)
-            if ts > self._max_ts[sub]:
-                self._max_ts[sub] = ts
-            self.processed += 1
-            self.busy_time[sub] += self.service_time
-            self.emit(sub, tup)
+            self._emit_rec(sub, now, rec)
         self.sim.after(interval, self._tick, sub, interval)
 
     def _wm_tick(self, sub: int) -> None:
@@ -374,6 +569,57 @@ class SourceOp(Operator):
                 self.wm[sub] = wm
                 self.emit_watermark(sub, wm)
         self.sim.after(self.watermark_interval, self._wm_tick, sub)
+
+    # ------------------------------------------------- durable log / replay
+    def offset(self, sub: int) -> int:
+        """Checkpointed log position: the next record to emit (everything
+        before it is pre-barrier at this source)."""
+        return self.replay_pos[sub]
+
+    def trim_log(self, sub: int, offset: int) -> None:
+        """Reclaim log records no restore can need (before the last
+        COMPLETED epoch's offset)."""
+        cut = offset - self.log_base[sub]
+        if cut > 0:
+            del self.log[sub][:cut]
+            self.log_base[sub] = offset
+
+    def rewind(self, sub: int, offset: int) -> None:
+        """Recovery (DESIGN.md §7): reset the emit cursor to a
+        checkpointed offset.  Watermark state restarts from scratch —
+        the replayed stream re-advances it."""
+        if offset < self.log_base[sub]:
+            raise ValueError(f"offset {offset} already trimmed "
+                             f"(base {self.log_base[sub]})")
+        self.replay_pos[sub] = offset
+        self._max_ts[sub] = float("-inf")
+        self.replay_done_t[sub] = None
+
+    def resume(self, replay_speedup: float = 1.0) -> None:
+        """Restart ticking after a failure: drain the log at
+        ``replay_speedup`` x the live rate, then continue generating."""
+        if not self.replayable:
+            raise RuntimeError(f"{self.name} is not replayable")
+        self.stopped = False
+        self.replay_speedup = replay_speedup
+        for s in range(self.parallelism):
+            self.sim.after(self._interval * (s + 1) / self.parallelism,
+                           self._tick, s, self._interval)
+            if self.watermark_interval > 0:
+                self.sim.after(self.watermark_interval * (s + 1)
+                               / self.parallelism, self._wm_tick, s)
+
+
+@dataclass
+class _AlignedBarrier:
+    """Engine-internal sentinel enqueued when the LAST expected barrier
+    copy of an epoch is delivered to a subtask (DESIGN.md §7).  It sits
+    in the input queue behind every pre-barrier message, so by the time
+    it is handled all pre-barrier effects are applied — the consistent
+    cut at which ``snapshot_state`` runs."""
+    epoch: int
+    stall: float              # first-to-last barrier-copy delivery time
+    buffered: int             # post-barrier messages parked meanwhile
 
 
 @dataclass
@@ -423,21 +669,14 @@ class StatefulOp(Operator):
         self.mode = mode
         self.state_size = state_size
         self.read_only = read_only
+        self.policy = policy
+        self.cache_capacity = cache_capacity
+        self.deadline_aware = deadline_aware
         self.caches = []
         self.backends = []
         self.managers: List[PrefetchingManager] = []
         for s in range(parallelism):
-            if policy == "tac":
-                # deadline_aware: window panes carry far-future fire
-                # deadlines, where plain min-ts eviction would remove the
-                # panes firing next (core/tac.py, DESIGN.md §10)
-                c = TimestampAwareCache(cache_capacity,
-                                        deadline_aware=deadline_aware)
-            elif policy == "clock":
-                c = ClockCache(cache_capacity)
-            else:
-                c = LRUCache(cache_capacity)
-            self.caches.append(c)
+            self.caches.append(self._new_cache())
             self.backends.append(StateBackend(
                 backend_model, default_factory=default_state,
                 assume_present=dense_backend))
@@ -453,10 +692,36 @@ class StatefulOp(Operator):
         self.waiting: List[Dict[Any, List[Tuple_]]] = \
             [defaultdict(list) for _ in range(parallelism)]
         self.in_flight: List[set] = [set() for _ in range(parallelism)]
+        # memtable semantics for in-flight write-backs (DESIGN.md §3):
+        # an entry popped for async write-back stays readable here until
+        # its write LANDS — otherwise a concurrent fetch of the same key
+        # reads the backend's stale copy and the in-flight updates are
+        # lost (a real lost-update race; RocksDB's memtable is exactly
+        # this shield)
+        self.wb_pending: List[Dict[Any, Any]] = \
+            [dict() for _ in range(parallelism)]
         self.io_workers = io_workers
         self.blocked_time = [0.0] * parallelism
         self.outputs = 0
         self.miss_reported = [False] * parallelism
+        # hint WAL (DESIGN.md §7): hints are tiny (key + ts), so logging
+        # them durably is cheap; on recovery the log for the replay
+        # horizon is re-issued through the PrefetchingManager to warm the
+        # cold cache before replayed data arrives.  Only populated when a
+        # CheckpointCoordinator is attached (the coordinator trims it at
+        # each completed epoch).
+        self.hint_log: List[List] = [[] for _ in range(parallelism)]
+
+    def _new_cache(self):
+        if self.policy == "tac":
+            # deadline_aware: window panes carry far-future fire
+            # deadlines, where plain min-ts eviction would remove the
+            # panes firing next (core/tac.py, DESIGN.md §10)
+            return TimestampAwareCache(self.cache_capacity,
+                                       deadline_aware=self.deadline_aware)
+        if self.policy == "clock":
+            return ClockCache(self.cache_capacity)
+        return LRUCache(self.cache_capacity)
 
     # ------------------------------------------------------------- messages
     def handle(self, sub: int, msg: Any) -> Optional[float]:
@@ -477,22 +742,10 @@ class StatefulOp(Operator):
                 self.managers[sub].on_marker_data(msg.marker_id, self.sim.t)
                 self.emit(sub, msg)
             return 1e-7
-        if isinstance(msg, CheckpointBarrier):
-            if (msg.checkpoint_id, sub) in self._barrier_seen:
-                return 1e-7
-            self._barrier_seen.add((msg.checkpoint_id, sub))
-            # paper §IV-E: all modified state in the TAC — resident or staged
-            # in the eviction buffer — is persisted before the checkpoint
-            # completes; the write batch runs at backend speed but off the
-            # tuple path (modelled as one bulk write here)
-            dirty = self.caches[sub].flush_dirty()
-            for e in dirty:
-                self.backends[sub].write(e.key, e.state, self.state_size)
-            self.engine.ack_barrier(b_id=msg.checkpoint_id,
-                                    op=self.name, sub=sub,
-                                    n_flushed=len(dirty))
-            self.emit(sub, msg)
-            return 1e-6 * max(1, len(dirty))
+        if isinstance(msg, (_AlignedBarrier, CheckpointBarrier)):
+            # the aligned-barrier cut, snapshot, and forward live on the
+            # base class; snapshot_state below adds the keyed payload
+            return Operator.handle(self, sub, msg)
         if isinstance(msg, Hint):
             return self._on_hint(sub, msg)
         self.processed += 1
@@ -536,6 +789,15 @@ class StatefulOp(Operator):
         plane.begin_migration(shard, dst_sub)
         in_shard = lambda k: plane.shard_of(k) == shard
         entries = self.caches[src].export_entries(in_shard)
+        # dirty entries whose write-back is STILL IN FLIGHT at the source
+        # left the eviction buffer already, so the cache drain missed
+        # them — their latest state must ride the migration too, or a
+        # fetch at the destination racing the write-back reads the stale
+        # backend copy (the cross-subtask face of the memtable race; the
+        # in-flight write itself still lands at the destination backend,
+        # idempotently, via the owner-directed write in _io_done)
+        for key in [k for k in self.wb_pending[src] if in_shard(k)]:
+            entries.append(self.wb_pending[src][key])
         # parked tuples whose fetch is still in flight at the source move
         # with the shard; their completions are dropped by the owner guard
         # in _io_done (the destination refetches on replay if needed)
@@ -561,14 +823,11 @@ class StatefulOp(Operator):
 
     def _finish_migration(self, shard: int, dst_sub: int,
                           entries: List[Any]) -> None:
-        cache = self.caches[dst_sub]
-        now = self.sim.t
-        for e in entries:
-            # TAC entries keep their timestamps (a prefetched entry whose
-            # hint ts lies in the future stays protected across the move);
-            # LRU/Clock entries carry none and re-enter at migration time
-            cache.insert(e.key, e.state, getattr(e, "ts", now),
-                         dirty=e.dirty, size=e.size)
+        # TAC entries keep their timestamps (a prefetched entry whose
+        # hint ts lies in the future stays protected across the move);
+        # LRU/Clock entries carry none and re-enter at migration time
+        self.caches[dst_sub].import_entries(entries, now_ts=self.sim.t)
+        self.shards.last_finish_t = self.sim.t
         self.shards.finish_migration(shard)
         pending = self.shard_pending.pop(shard, [])
         if pending:
@@ -576,6 +835,9 @@ class StatefulOp(Operator):
 
     def _on_hint(self, sub: int, h: Hint) -> float:
         mgr = self.managers[sub]
+        if self.engine.coordinator is not None:
+            # hint WAL for prefetch-warmed recovery (DESIGN.md §7)
+            self.hint_log[sub].append((self.sim.t, h.key, h.ts))
         # hints whose access ts fell behind the lateness horizon target
         # state the operator will drop or has purged (windowed, §10);
         # with no watermarks wm is -inf and the check never fires
@@ -597,6 +859,12 @@ class StatefulOp(Operator):
                     self.shards.prefetch_hits[
                         self.shards.shard_of(tup.key)] += 1
             return self._apply(sub, tup, state)
+        wb = self.wb_pending[sub].get(tup.key)
+        if wb is not None:
+            # key's latest state rides an in-flight write-back: a backend
+            # fetch would read STALE data — serve from the memtable
+            cache.insert(tup.key, wb.state, tup.ts, size=self.state_size)
+            return self._apply(sub, tup, wb.state)
         # miss
         if self.mode == "prefetch" and not self.managers[sub].enabled:
             la = self.managers[sub].on_cache_misses(self.sim.t)
@@ -638,6 +906,7 @@ class StatefulOp(Operator):
                 if wb is None:
                     return
                 req = _IOReq("write", wb.key, entry=wb)
+                self.wb_pending[sub][wb.key] = wb
             self.io_free[sub] -= 1
             if req.kind == "write":
                 lat = self.backends[sub].latency(self.state_size)
@@ -661,6 +930,9 @@ class StatefulOp(Operator):
         cache = self.caches[sub]
         mgr = self.managers[sub]
         if req.kind == "write":
+            pend = self.wb_pending[sub]
+            if pend.get(req.key) is req.entry:
+                del pend[req.key]         # memtable entry landed
             # a write-back in flight across a migration must land in the
             # CURRENT owner's partition (the shard's backend entries moved
             # at drain time and this lane still holds the latest state) —
@@ -689,6 +961,9 @@ class StatefulOp(Operator):
                 self._on_dead_parked(sub, tup)
         else:
             state, _ = self.backends[sub].fetch(req.key, self.state_size)
+            wb = self.wb_pending[sub].get(req.key)
+            if wb is not None:
+                state = wb.state          # memtable is newer than backend
             hint_ts = mgr.hints.complete(req.key)
             mgr.hints.discard(req.key)    # clear any stale unprocessed entry
             self.in_flight[sub].discard(req.key)
@@ -708,6 +983,14 @@ class StatefulOp(Operator):
 
     # ------------------------------------------------------------ computing
     def _apply(self, sub: int, tup: Tuple_, state: Any) -> float:
+        # CONTRACT (DESIGN.md §7): an apply_fn that mutates state IN
+        # PLACE and returns the SAME object skips the dirty-write below.
+        # The live run stays consistent (cache and backend share the
+        # object), but the key never re-enters a checkpoint delta, so a
+        # restore would revert it.  Checkpointed jobs must either return
+        # a new object (copy-on-write, as every shipped query does) or
+        # write the mutated state back explicitly (as IntervalJoinOp
+        # does, joins.py §11).
         new_state, outputs = self.apply_fn(tup, state)
         if not self.read_only and new_state is not state:
             self.caches[sub].write(tup.key, new_state, tup.ts,
@@ -721,6 +1004,12 @@ class StatefulOp(Operator):
     def handle_parked(self, sub: int, tup: Tuple_) -> float:
         state = self.caches[sub].lookup(tup.key, tup.ts)
         refetch = 0.0
+        if state is None:
+            wb = self.wb_pending[sub].get(tup.key)
+            if wb is not None:              # memtable shield (see __init__)
+                self.caches[sub].insert(tup.key, wb.state, tup.ts,
+                                        size=self.state_size)
+                return ASYNC_RESUME + self._apply(sub, tup, wb.state)
         if state is None:                   # evicted before processing:
             # the refetch is synchronous on the tuple path, so it is charged
             # at full backend latency (presence-aware, like the sync path)
@@ -760,6 +1049,112 @@ class StatefulOp(Operator):
         if new is not None:
             self.engine.set_lookahead(self.name, new)
 
+    # ---------------------------------------------------- snapshot / restore
+    def snapshot_state(self, sub: int, epoch: int) -> dict:
+        """Barrier-time snapshot of this subtask's durable state
+        (DESIGN.md §7).  Three parts:
+
+          * TAC dirty drain (paper §IV-E): every modified entry —
+            resident or staged in the eviction buffer — is written
+            through to the backend so the backend delta below covers it;
+          * backend DELTA: keys written/deleted since the last epoch
+            (incremental — the SnapshotStore composes full state);
+          * in-flight keyed work that a restart would otherwise lose:
+            tuples parked on outstanding fetches, tuples parked behind an
+            in-flight shard migration, and the HintsBuffer contents.
+
+        The export itself runs off the tuple path (like the migration
+        drain, §9) and is metered as snapshot bytes, not workload reads;
+        the RESTORE of these bytes is charged at backend speed
+        (streaming/recovery.py) — no free bulk I/O in either direction.
+        """
+        import copy
+        cache = self.caches[sub]
+        dirty = cache.flush_dirty()
+        for e in dirty:
+            self.backends[sub].write(e.key, e.state, self.state_size)
+        # write-backs still in flight at the cut carry pre-barrier state
+        # that would otherwise land only in the NEXT epoch's delta: write
+        # them through now (idempotent with the completion's own write)
+        for e in self.wb_pending[sub].values():
+            self.backends[sub].write(e.key, e.state, self.state_size)
+        delta, deleted = self.backends[sub].snapshot_delta()
+        mgr = self.managers[sub]
+        # cache MANIFEST: resident keys + their TAC timestamps (no state
+        # payloads — a few bytes per key).  Recovery warmup re-fetches
+        # these alongside the hint WAL: the hottest keys are exactly the
+        # ones CMS suppression keeps OUT of the hint stream while they
+        # sit resident, so without the manifest a warmed restore would
+        # stage only the cold tail (DESIGN.md §7)
+        manifest = [(e.key, getattr(e, "ts", 0.0))
+                    for e in getattr(cache, "entries", {}).values()]
+        payload = {
+            "n_flushed": len(dirty),
+            "delta": delta,
+            "deleted": deleted,
+            "hints": dict(mgr.hints.in_flight) | dict(mgr.hints.unprocessed),
+            "manifest": manifest,
+            "inflight": copy.deepcopy(self._snapshot_inflight(sub)),
+            "extra": self.snapshot_extra(sub),
+            "bytes": len(delta) * self.state_size,
+        }
+        self.engine.ack_barrier(b_id=epoch, op=self.name, sub=sub,
+                                n_flushed=len(dirty))
+        return payload
+
+    def _snapshot_inflight(self, sub: int) -> List[Any]:
+        """Keyed messages whose state effects are NOT yet applied at the
+        barrier cut and that the source will NOT replay (they were
+        emitted before the epoch's offsets): parked-on-fetch tuples and
+        mid-migration parked traffic.  Windowed subclasses add pending
+        FIRE messages (§10)."""
+        out = []
+        for parked in self.waiting[sub].values():
+            out.extend(parked)
+        if self.shards is not None:
+            for shard, msgs in self.shard_pending.items():
+                if self.shards.owner[shard] == sub:
+                    out.extend(msgs)
+        return out
+
+    def snapshot_extra(self, sub: int) -> Optional[dict]:
+        """Operator-specific registries riding the snapshot (window
+        registries §10, join retention §11).  The shard-plane owner table
+        is included so recovery restores routing consistent with where
+        the backend partitions were cut (§9; migrations serialize with
+        epochs, so the table is stable across one epoch's cut)."""
+        import copy
+        if self.shards is not None:
+            return {"plane_owner": copy.deepcopy(list(self.shards.owner))}
+        return None
+
+    def restore_extra(self, sub: int, extra: Optional[dict]) -> None:
+        if extra and self.shards is not None and "plane_owner" in extra:
+            self.shards.owner = list(extra["plane_owner"])
+
+    def reset_volatile(self) -> None:
+        """A process crash loses every cache, I/O lane, and parked tuple;
+        backends are cleared too — the authoritative copy lives in the
+        SnapshotStore and is re-imported by recovery (DESIGN.md §7)."""
+        super().reset_volatile()
+        p = self.parallelism
+        self.caches = [self._new_cache() for _ in range(p)]
+        self.waiting = [defaultdict(list) for _ in range(p)]
+        self.in_flight = [set() for _ in range(p)]
+        self.wb_pending = [dict() for _ in range(p)]
+        self.io_q = [deque() for _ in range(p)]
+        self.io_free = [self.io_workers] * p
+        self.miss_reported = [False] * p
+        self.shard_pending.clear()
+        if self.shards is not None:
+            self.shards.migrating.clear()
+        from repro.core.hints import HintsBuffer
+        for m in self.managers:
+            m.hints = HintsBuffer()
+            m._marker_hint_t.clear()
+        for b in self.backends:
+            b.reset()
+
 
 class SinkOp(Operator):
     def process(self, sub: int, tup: Tuple_) -> Optional[float]:
@@ -793,6 +1188,19 @@ class Engine:
         self.marker_interval = marker_interval
         self.lookahead_timeline: List[Tuple[float, str]] = []
         self.checkpoint_acks: Dict[int, List] = {}
+        # fault-tolerance plane (DESIGN.md §7): a CheckpointCoordinator
+        # (streaming/recovery.py) attaches itself here; the engine-level
+        # alignment counters below fill regardless so legacy
+        # trigger_checkpoint callers still see stall metrics
+        self.coordinator = None
+        # flipped (permanently) by the first trigger_checkpoint: keeps
+        # the per-batch barrier scan and alignment machinery entirely
+        # off the delivery hot path of non-checkpointed runs
+        self.barriers_active = False
+        self.snapshots_taken = 0
+        self.align_stall_total = 0.0
+        self.align_stall_max = 0.0
+        self.align_buffered = 0
 
     # -------------------------------------------------------------- building
     def add(self, op: Operator) -> Operator:
@@ -810,9 +1218,11 @@ class Engine:
             src.out_hint.append(ch)
         else:
             src.out_data.append(ch)
-            # watermarks flow on data edges only: every (channel, src
-            # subtask) pair must report before the min-of-inputs advances
+            # watermarks and checkpoint barriers flow on data edges only:
+            # every (channel, src subtask) pair must report before the
+            # min-of-inputs advances / the barrier alignment completes
             dst.wm_expected += src.parallelism
+            dst.barrier_expected += src.parallelism
 
     def register_prefetching(self, stateful: StatefulOp,
                              lookaheads: List[MapOp]) -> None:
@@ -835,14 +1245,26 @@ class Engine:
                       at: Optional[float] = None) -> None:
         """Schedule (or run now) a key-range migration on a sharded
         stateful operator — the rebalance entry point for benchmarks and
-        an elasticity controller."""
+        an elasticity controller.  With a CheckpointCoordinator attached,
+        migrations SERIALIZE with checkpoint epochs (DESIGN.md §7): a
+        migration requested while an epoch is in flight is deferred until
+        the epoch completes, so one epoch's cut never straddles an
+        ownership flip."""
         op = self.operators[op_name]
         if not isinstance(op, StatefulOp):
             raise TypeError(f"{op_name} is not a StatefulOp")
         if at is None:
-            op.migrate_shard(shard, dst_sub)
+            self._do_migrate(op_name, shard, dst_sub)
         else:
-            self.sim.at(at, op.migrate_shard, shard, dst_sub)
+            self.sim.at(at, self._do_migrate, op_name, shard, dst_sub)
+
+    def _do_migrate(self, op_name: str, shard: int, dst_sub: int) -> None:
+        coord = self.coordinator
+        if coord is not None and (coord.pending is not None
+                                  or coord.in_recovery):
+            coord.defer_migration(op_name, shard, dst_sub)
+            return
+        self.operators[op_name].migrate_shard(shard, dst_sub)
 
     def set_lookahead(self, stateful_name: str, lookahead_name: str) -> None:
         for name in self._candidate_ops.get(stateful_name, []):
@@ -862,17 +1284,42 @@ class Engine:
             self.latency_t.append(now)
 
     def trigger_checkpoint(self, checkpoint_id: int) -> None:
+        """Inject an epoch's barriers at every source subtask (each
+        downstream operator aligns over all of them, DESIGN.md §7).  The
+        CheckpointCoordinator drives this on an interval and records
+        source offsets first; calling it directly still produces aligned
+        snapshots and ``checkpoint_acks`` (but backend deltas only cover
+        writes since delta tracking was switched on — attach a
+        coordinator before data flows for restorable snapshots)."""
+        self.barriers_active = True
+        for op in self.operators.values():
+            if isinstance(op, StatefulOp):
+                for bk in op.backends:
+                    bk.track_deltas = True
         b = CheckpointBarrier(checkpoint_id)
         for name in self.order:
             op = self.operators[name]
             if isinstance(op, SourceOp):
-                for ch in op.out_data:
-                    ch.send(0, b)
+                for s in range(op.parallelism):
+                    for ch in op.out_data:
+                        ch.send(s, b)
 
     def ack_barrier(self, b_id: int, op: str, sub: int,
                     n_flushed: int) -> None:
         self.checkpoint_acks.setdefault(b_id, []).append(
             (self.sim.t, op, sub, n_flushed))
+
+    def on_snapshot(self, epoch: int, op: str, sub: int,
+                    payload: Optional[dict], stall: float,
+                    buffered: int) -> None:
+        """One (operator, subtask) reached the epoch's aligned cut."""
+        self.snapshots_taken += 1
+        self.align_stall_total += stall
+        self.align_stall_max = max(self.align_stall_max, stall)
+        self.align_buffered += buffered
+        if self.coordinator is not None:
+            self.coordinator.on_operator_snapshot(epoch, op, sub, payload,
+                                                  stall, buffered)
 
     def _inject_marker(self) -> None:
         mid = next(self._marker_ids)
@@ -954,6 +1401,21 @@ class Engine:
                     # per-shard routed-plane counters (DESIGN.md §9), not
                     # just the global totals above
                     out[f"{name}_shard_plane"] = op.shards.snapshot()
+        if self.snapshots_taken:
+            # checkpoint-plane counters (DESIGN.md §7), alongside the
+            # per-shard block above
+            out["checkpoint"] = {
+                "snapshots_taken": self.snapshots_taken,
+                "align_stall_total": self.align_stall_total,
+                "align_stall_max": self.align_stall_max,
+                "align_stall_avg": self.align_stall_total
+                / self.snapshots_taken,
+                "align_buffered": self.align_buffered,
+            }
+            if self.coordinator is not None:
+                out["checkpoint"].update(self.coordinator.metrics_block())
+        if self.coordinator is not None and self.coordinator.recoveries:
+            out["recovery"] = self.coordinator.recovery_block()
         for name, op in self.operators.items():
             # operator-specific counters (windowed fires/late paths, burst
             # hints, ...) without the engine importing those modules

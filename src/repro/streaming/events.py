@@ -72,5 +72,15 @@ class Watermark:
 
 @dataclass
 class CheckpointBarrier:
-    checkpoint_id: int
+    """Epoch-numbered checkpoint barrier (DESIGN.md §7).
+
+    Injected at sources by the ``CheckpointCoordinator``
+    (``streaming/recovery.py``) and broadcast downstream on every data
+    edge.  Like watermarks, each copy is tagged with the (channel, src
+    subtask) input it travelled on so a multi-input operator can ALIGN:
+    it buffers post-barrier traffic from inputs whose barrier already
+    arrived and snapshots only once every input reported (Chandy-Lamport
+    via Flink-style aligned barriers)."""
+    checkpoint_id: int        # epoch number
+    origin: Any = None        # (channel id, src subtask) — set per copy
     size: int = 16

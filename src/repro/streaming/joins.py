@@ -242,6 +242,29 @@ class IntervalJoinOp(StatefulOp):
         self._purged[src] -= moving
         self._purged[dst_sub] |= moving
 
+    # ---------------------------------------------------- snapshot / restore
+    def snapshot_extra(self, sub: int) -> Dict[str, Any]:
+        """The retention registry and purge marks ride the snapshot
+        (DESIGN.md §7): restored keys must keep their expiry deadlines
+        (watermark purges resume where they left off) and dead keys must
+        stay dead across a restore (§11)."""
+        import copy
+        out = super().snapshot_extra(sub) or {}
+        out["retention"] = copy.deepcopy(self.retention[sub])
+        out["purged"] = set(self._purged[sub])
+        return out
+
+    def restore_extra(self, sub: int, extra: Optional[dict]) -> None:
+        super().restore_extra(sub, extra)
+        if extra and "retention" in extra:
+            self.retention[sub] = extra["retention"]
+            self._purged[sub] = set(extra.get("purged", ()))
+
+    def reset_volatile(self) -> None:
+        super().reset_volatile()
+        self.retention = [dict() for _ in range(self.parallelism)]
+        self._purged = [set() for _ in range(self.parallelism)]
+
     # --------------------------------------------------------------- metrics
     def extra_metrics(self) -> Dict[str, Any]:
         return {"joined": self.joined, "late_dropped": self.late_dropped,

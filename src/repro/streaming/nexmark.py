@@ -161,7 +161,8 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 window_slide: Optional[float] = None,
                 allowed_lateness: Optional[float] = None,
                 join_hints: str = "two",
-                join_horizon: Optional[float] = None) -> Engine:
+                join_horizon: Optional[float] = None,
+                replayable: bool = False) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -184,19 +185,24 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     additionally take ``join_hints`` ("two" = both sides emit cross-side
     hints, "one" = probe side only, the ablation) and, for the interval
     join, ``join_horizon`` (how long an auction accepts bids; defaults
-    to ``cfg.active_window``)."""
+    to ``cfg.active_window``).
+
+    ``replayable=True`` puts a durable log in front of the source
+    (DESIGN.md §7): the generator runs on a logical clock and records are
+    replayable from a checkpointed offset — required for the failure/
+    recovery scenarios (``streaming/recovery.py``)."""
     if query in ("q5", "q7"):
         return _build_windowed_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, window_slide,
-            allowed_lateness)
+            allowed_lateness, replayable)
     if query == "q8" or (query == "q20" and cfg.oo_bound > 0):
         return _build_join_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, allowed_lateness,
-            join_hints, join_horizon)
+            join_hints, join_horizon, replayable)
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
 
@@ -332,7 +338,7 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
         return tup
 
     src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
-                           gen_filtered))
+                           gen_filtered, replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=type_filter,
                           service_time=15e-6, key_of=key_of,
                           cms_conf=cms_conf))
@@ -372,7 +378,8 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
 def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
                           parallelism, source_parallelism, io_workers,
                           cms_conf, n_shards, buffer_timeout, hint_ts,
-                          window_size, window_slide, allowed_lateness):
+                          window_size, window_slide, allowed_lateness,
+                          replayable=False):
     """Event-time windowed NEXMark queries (DESIGN.md §10).
 
     q5 (hot items, simplified): bid count per auction per SLIDING window,
@@ -434,7 +441,7 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
 
     src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
                            gen, watermark_interval=cfg.watermark_interval,
-                           oo_bound=cfg.oo_bound))
+                           oo_bound=cfg.oo_bound, replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=bid_filter,
                           service_time=15e-6))
     winla = eng.add(WindowedLookaheadOp(
@@ -479,7 +486,7 @@ def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
                       parallelism, source_parallelism, io_workers,
                       cms_conf, n_shards, buffer_timeout, hint_ts,
                       window_size, allowed_lateness, join_hints,
-                      join_horizon):
+                      join_horizon, replayable=False):
     """Stream-stream join queries with two-sided keyed prefetching
     (DESIGN.md §11).
 
@@ -581,7 +588,7 @@ def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
 
     src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
                            gen, watermark_interval=cfg.watermark_interval,
-                           oo_bound=cfg.oo_bound))
+                           oo_bound=cfg.oo_bound, replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=type_filter,
                           service_time=15e-6))
     la_kw = dict(fn=rekey, hint_sides=hint_sides, hint_ts_mode=hint_ts,

@@ -57,6 +57,12 @@ class ShardPlane:
                 not all(0 <= o < n_owners for o in self.owner):
             raise ValueError("owners must map every shard to a subtask")
         self.migrating: Dict[int, int] = {}     # shard -> destination sub
+        # when the last migration LANDED: the checkpoint coordinator keeps
+        # deferring triggers for a short quiesce after this, so the tail
+        # of stale-partitioned in-flight traffic (forwarded around the
+        # flip with no channel origin) drains before any barrier cut
+        # (DESIGN.md §7 ∩ §9)
+        self.last_finish_t = float("-inf")
         # per-shard counters
         self.hints_routed = [0] * n_shards
         self.tuples_routed = [0] * n_shards

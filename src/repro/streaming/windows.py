@@ -36,14 +36,30 @@ from repro.streaming.events import Hint, Tuple_, WindowKey
 
 
 class _Fire:
-    """Sentinel payload of a self-addressed fire message."""
+    """Sentinel payload of a self-addressed fire message.  Identity IS
+    the semantics (``payload is FIRE``), so copies and pickles — snapshot
+    capture of pending FIREs, DESIGN.md §7 — must resolve back to the
+    singleton."""
     __slots__ = ()
 
     def __repr__(self):
         return "<FIRE>"
 
+    def __copy__(self):
+        return self
+
+    def __deepcopy__(self, memo):
+        return self
+
+    def __reduce__(self):
+        return (_fire_singleton, ())
+
 
 FIRE = _Fire()
+
+
+def _fire_singleton() -> _Fire:
+    return FIRE
 
 
 class WindowAssigner:
@@ -314,6 +330,36 @@ class WindowedStatefulOp(StatefulOp):
             if not meta["keys"]:
                 del self.windows[src][wid]
 
+    # ---------------------------------------------------- snapshot / restore
+    def snapshot_extra(self, sub: int) -> Dict[str, Any]:
+        """The per-window live-key/fired registry rides the snapshot
+        (DESIGN.md §7): restored panes must know which windows already
+        fired (their replayed stragglers take the late path, §10) and
+        which keys still await a FIRE."""
+        import copy
+        out = super().snapshot_extra(sub) or {}
+        out["windows"] = copy.deepcopy(self.windows[sub])
+        return out
+
+    def restore_extra(self, sub: int, extra: Optional[dict]) -> None:
+        super().restore_extra(sub, extra)
+        if extra and "windows" in extra:
+            self.windows[sub] = extra["windows"]
+
+    def _snapshot_inflight(self, sub: int) -> List[Any]:
+        """Pending FIRE messages join the in-flight capture: a FIRE
+        scheduled by a pre-barrier watermark but not yet applied at the
+        cut has already marked its key fired in the registry — without
+        re-delivery the restored window would never emit (§10 ∩ §7)."""
+        out = super()._snapshot_inflight(sub)
+        out.extend(t for t in self.queues[sub]
+                   if isinstance(t, Tuple_) and t.payload is FIRE)
+        return out
+
+    def reset_volatile(self) -> None:
+        super().reset_volatile()
+        self.windows = [dict() for _ in range(self.parallelism)]
+
     # --------------------------------------------------------------- metrics
     def extra_metrics(self) -> Dict[str, Any]:
         return {"fires": self.fires, "fires_lost": self.fires_lost,
@@ -409,6 +455,13 @@ class WindowedLookaheadOp(MapOp):
                     self.burst_hints += 1
                     self.emit_hint(sub, Hint(WindowKey(base, wid), end,
                                              origin=self.name))
+
+    def reset_volatile(self) -> None:
+        # live-key tracking and burst bookkeeping are process-local soft
+        # state: replayed tuples rebuild them (DESIGN.md §7)
+        super().reset_volatile()
+        self.win_keys = [dict() for _ in range(self.parallelism)]
+        self._burst_done = [set() for _ in range(self.parallelism)]
 
     def extra_metrics(self) -> Dict[str, Any]:
         return {"burst_hints": self.burst_hints,

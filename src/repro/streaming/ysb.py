@@ -42,7 +42,9 @@ class YSBGen:
 def build_ysb(policy: str, mode: str, cfg: YSBConfig,
               cache_entries: int = 4096, parallelism: int = 3,
               source_parallelism: int = 2, io_workers: int = 8,
-              cms_conf=None) -> Engine:
+              cms_conf=None, replayable: bool = False) -> Engine:
+    """``replayable=True`` runs the source against a durable log so the
+    failure/recovery scenarios (DESIGN.md §7) can rewind and replay it."""
     eng = Engine()
     gen = YSBGen(cfg)
     state_size = 64                        # campaign metadata
@@ -60,7 +62,8 @@ def build_ysb(policy: str, mode: str, cfg: YSBConfig,
         return state, [Tuple_(tup.ts, tup.key, (tup.payload, state), 130,
                               tup.ingest_t)]
 
-    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate, gen))
+    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate, gen,
+                           replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=vfilter,
                           service_time=20e-6, key_of=key_of,
                           cms_conf=cms_conf))

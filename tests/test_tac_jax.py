@@ -118,3 +118,30 @@ def test_evict_expired_per_slot_retention():
     assert int(n) == 1
     _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(2))
     assert list(np.asarray(hit)) == [False, True]
+
+
+def test_flush_dirty_exports_and_clears_without_evicting():
+    """Barrier-time dirty export (DESIGN.md §7): dirty rows come back as
+    the write-back batch, their dirty bits clear, and — unlike the
+    migration drain — the entries STAY resident."""
+    state = tac_jax.init(2, 4, 3)
+    keys = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    vals = jnp.arange(12.0).reshape(4, 3)
+    dirty = jnp.asarray([True, False, True, False])
+    state = tac_jax.admit(state, keys, jnp.asarray([1., 2., 3., 4.]),
+                          vals, dirty)
+    state, exp = tac_jax.flush_dirty(state)
+    assert sorted(exp.keys.tolist()) == [1, 3]
+    assert bool(exp.dirty.all())
+    # values rode along with their slots
+    for k, v, slot in zip(exp.keys, exp.vals, exp.slots):
+        b, w = divmod(int(slot), state.keys.shape[1])
+        assert int(np.asarray(state.keys)[b, w]) == int(k)
+        np.testing.assert_allclose(np.asarray(state.vals)[b, w], v)
+    # nothing evicted, nothing dirty any more
+    _, hit, _ = tac_jax.lookup(state, keys, jnp.zeros(4))
+    assert bool(np.asarray(hit).all())
+    assert not bool(np.asarray(state.dirty).any())
+    # second flush is empty
+    state, exp2 = tac_jax.flush_dirty(state)
+    assert exp2.keys.shape[0] == 0

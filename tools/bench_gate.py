@@ -12,7 +12,11 @@ its headline advantage on the (smoke) config it was run with:
     enough that only the on-demand bound is load-bearing);
   * joins (``BENCH_joins*.json``): for every query present,
     ``twosided.p99`` must be <= ``ondemand.p99`` (``onesided`` is
-    reported informationally, same rationale).
+    reported informationally, same rationale);
+  * recovery (``BENCH_recovery*.json``): for every query present,
+    warmed recovery's post-restore p99 spike must be <= cold recovery's,
+    and the recovered (warmed) run's steady-state p99 must be <= 1.2x
+    the unfailed run's steady-state p99 (ISSUE 5 acceptance).
 
 Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
 """
@@ -80,6 +84,44 @@ def gate_joins(data: dict, fails: list, name: str) -> None:
                          f"on-demand ({od['p99']:.4f}s)")
 
 
+def gate_recovery(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        rs = data[q]
+        cold, warm = rs.get("cold"), rs.get("warmed")
+        unf = rs.get("unfailed")
+        if not cold or not warm:
+            fails.append(f"{name}: {q} missing cold/warmed results")
+            continue
+        cs, ws = cold.get("post_restore_p99"), warm.get("post_restore_p99")
+        if cs is None or ws is None:
+            fails.append(f"{name}: {q} missing post_restore_p99")
+            continue
+        ok = ws <= cs
+        print(f"  recovery {q}: warmed post-restore p99 {ws*1e3:.2f}ms vs "
+              f"cold {cs*1e3:.2f}ms -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} warmed post-restore p99 ({ws:.4f}s)"
+                         f" > cold ({cs:.4f}s)")
+        if not unf or not unf.get("steady_p99") \
+                or not warm.get("steady_p99"):
+            # the steady-state rule must never pass vacuously: a stalled
+            # catch-up that empties the steady window is itself a failure
+            fails.append(f"{name}: {q} missing unfailed/warmed steady_p99"
+                         f" — steady-state rule cannot be checked")
+            continue
+        u, w = unf["steady_p99"], warm["steady_p99"]
+        ok = w <= 1.2 * u
+        print(f"  recovery {q}: warmed steady p99 {w*1e3:.2f}ms vs "
+              f"1.2x unfailed {1.2*u*1e3:.2f}ms -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} warmed steady p99 ({w:.4f}s) > "
+                         f"1.2x unfailed ({u:.4f}s)")
+
+
 def main(argv) -> int:
     if not argv:
         print("usage: bench_gate.py BENCH_*.json ...")
@@ -103,6 +145,8 @@ def main(argv) -> int:
             gate_windowing(data, fails, name)
         elif "joins" in name:
             gate_joins(data, fails, name)
+        elif "recovery" in name:
+            gate_recovery(data, fails, name)
         else:
             fails.append(f"{name}: no gate rule for this artifact")
     if fails:

@@ -7,7 +7,9 @@ Fails when:
   * ``README.md`` references a ``BENCH_*.json`` artifact that is not
     checked in at the repo root;
   * a checked-in ``BENCH_*.json`` is NOT referenced from ``README.md``
-    (every artifact must appear in the regeneration table);
+    (every artifact must appear in the regeneration table), or README
+    never names the ``benchmarks/<name>.py`` script that regenerates it
+    (the regeneration COMMAND is part of the contract);
   * ``README.md`` references a module path (``repro.x.y``) or a
     repo-relative file path in backticks that does not exist;
   * a ``DESIGN.md §N`` citation in any ``.py`` file (src/, tools/,
@@ -103,12 +105,22 @@ def check_design_citations(fails: list) -> int:
 
 def check_bench_referenced(readme: Path, fails: list) -> None:
     """Every checked-in BENCH_*.json must be referenced from README.md
-    (the regeneration table is the contract for how to rebuild it)."""
+    (the regeneration table is the contract for how to rebuild it), and
+    the row must name the ``benchmarks/<name>.py`` script so the rebuild
+    command resolves."""
     text = readme.read_text() if readme.exists() else ""
     for path in sorted(ROOT.glob("BENCH_*.json")):
         if path.name not in text:
             fails.append(f"{path.name}: checked in but never referenced "
                          f"from README.md — add a regeneration-table row")
+            continue
+        script = f"benchmarks/{path.stem.split('_', 1)[1]}.py"
+        if script not in text:
+            fails.append(f"{path.name}: README.md never names {script} — "
+                         f"add the regeneration command to its row")
+        elif not (ROOT / script).exists():
+            fails.append(f"{path.name}: regeneration script {script} "
+                         f"does not exist")
 
 
 def check_bench_schemas(fails: list) -> int:
