@@ -95,7 +95,11 @@ def run_one(query: str, mode: str, qcfg: dict, duration: float,
             "hints_received": m.get("join_hints_received", 0),
             "hints_late": m.get("join_hints_late", 0),
             "prefetch_hits": m.get("join_prefetch_hits", 0),
-            "backend_reads": m.get("join_backend_reads", 0)}
+            "backend_reads": m.get("join_backend_reads", 0),
+            # prefetch-quality telemetry (DESIGN.md §12): per-hint
+            # outcomes, precision/recall, signed lead-time percentiles
+            "hint_quality": m.get("join_hint_quality", {}),
+            "evictions": m.get("join_evictions", {})}
 
 
 def main() -> None:

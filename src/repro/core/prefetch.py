@@ -118,7 +118,12 @@ class PrefetchingManager:
         self.enabled = False
         self.hints_received = 0
         self.hints_late = 0
+        self.hints_duplicate = 0
         self.prefetch_hits = 0
+        # optional registry histogram mirroring record_access_latency
+        # (DESIGN.md §12): the capped adaptation window stays the input
+        # to `evaluate`, the sketch keeps the FULL distribution
+        self.lat_hist = None
 
     # ------------------------------------------------------------ activation
     def on_cache_misses(self, now: float) -> Optional[str]:
@@ -148,6 +153,7 @@ class PrefetchingManager:
             self.hints_late += 1
             return False                      # late record: will be dropped
         if cache.contains(key):
+            self.hints_duplicate += 1
             cache.renew(key, access_ts)
             return False
         if self.hints.pending(key):
@@ -177,6 +183,8 @@ class PrefetchingManager:
         self.access_lat.append(lat)
         if len(self.access_lat) > self.window:
             del self.access_lat[0]
+        if self.lat_hist is not None:
+            self.lat_hist.observe(lat)
 
     # ------------------------------------------------------------ adaptation
     def evaluate(self, caches, now: float) -> Optional[str]:

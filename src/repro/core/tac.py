@@ -74,6 +74,14 @@ class TimestampAwareCache:
         # per-lookahead-origin accounting for mismatch attribution
         self.pf_ins_by_origin: Dict[str, int] = {}
         self.pf_unused_by_origin: Dict[str, int] = {}
+        # eviction-reason breakdown (DESIGN.md §12): (reason, admission)
+        # -> count, reason in {capacity, deadline, stale}, admission in
+        # {prefetched, demand} by how the victim was admitted
+        self.evict_reasons: Dict[Tuple[str, str], int] = {}
+        # optional prefetch-quality recorder (repro.obs.quality); when set,
+        # staged/used/wasted outcomes and signed lead times flow to the
+        # metrics registry
+        self.recorder = None
 
     # ------------------------------------------------------------- internals
     def _push(self, e: Entry) -> None:
@@ -82,15 +90,21 @@ class TimestampAwareCache:
         if self.deadline_aware:
             heapq.heappush(self._fheap, (-e.ts, self._gen, e.key))
 
-    def _remove_victim(self, e: Entry) -> None:
+    def _remove_victim(self, e: Entry, reason: str = "capacity") -> None:
         del self.entries[e.key]
         self.used -= e.size
         self.evictions += 1
-        if getattr(e, "prefetched_unused", False):
+        pf = getattr(e, "prefetched_unused", False)
+        adm = "prefetched" if getattr(e, "prefetched", False) else "demand"
+        self.evict_reasons[(reason, adm)] = \
+            self.evict_reasons.get((reason, adm), 0) + 1
+        if pf:
             self.prefetch_unused_evicted += 1
             org = getattr(e, "origin", "")
             self.pf_unused_by_origin[org] = \
                 self.pf_unused_by_origin.get(org, 0) + 1
+            if self.recorder is not None:
+                self.recorder.on_wasted()
         if e.dirty:
             self.evict_buffer[e.key] = e                   # async write-back
 
@@ -107,7 +121,7 @@ class TimestampAwareCache:
                 if ts >= self.clock:
                     break                   # only future deadlines remain
                 heapq.heappop(self._heap)
-                self._remove_victim(e)
+                self._remove_victim(e, reason="stale")
                 return
             # all live: farthest deadline goes first (Belady on deadlines)
             while self._fheap:
@@ -115,14 +129,14 @@ class TimestampAwareCache:
                 e = self.entries.get(key)
                 if e is None or e.ts != -nts:
                     continue
-                self._remove_victim(e)
+                self._remove_victim(e, reason="deadline")
                 return
         while self._heap:
             ts, _, key = heapq.heappop(self._heap)
             e = self.entries.get(key)
             if e is None or e.ts != ts:
                 continue                                   # stale heap record
-            self._remove_victim(e)
+            self._remove_victim(e, reason="capacity")
             return
         return
 
@@ -161,6 +175,11 @@ class TimestampAwareCache:
         if now_ts > e.ts:
             e.ts = now_ts
             self._push(e)
+        if getattr(e, "prefetched_unused", False) and \
+                self.recorder is not None:
+            # first read of a staged entry: signed lead time (now minus
+            # stage-complete) flows to the registry
+            self.recorder.on_used(getattr(e, "stage_t", 0.0))
         e.prefetched_unused = False
         return e.state
 
@@ -178,6 +197,7 @@ class TimestampAwareCache:
         self._make_room(size)
         e = Entry(key, state, ts, dirty, size)
         e.prefetched_unused = prefetched
+        e.prefetched = prefetched          # admission path, for evict split
         e.origin = origin
         self.entries[key] = e
         self.used += size
@@ -186,6 +206,9 @@ class TimestampAwareCache:
             self.prefetch_insertions += 1
             self.pf_ins_by_origin[origin] = \
                 self.pf_ins_by_origin.get(origin, 0) + 1
+            if self.recorder is not None:
+                e.stage_t = self.recorder.now()
+                self.recorder.on_staged()
 
     def write(self, key: Any, state: Any, now_ts: float, size: int = 1
               ) -> None:
@@ -278,6 +301,12 @@ class TimestampAwareCache:
             e.dirty = False
         self.evict_buffer.clear()
         return out
+
+    def eviction_block(self) -> Dict[str, int]:
+        """Flat ``"<reason>.<admission>" -> count`` rollup of the
+        eviction-reason breakdown (DESIGN.md §12)."""
+        return {f"{r}.{a}": n
+                for (r, a), n in sorted(self.evict_reasons.items())}
 
     def __len__(self) -> int:
         return len(self.entries)

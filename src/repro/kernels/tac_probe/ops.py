@@ -21,3 +21,23 @@ def tac_probe(qkeys, bucket_keys, bucket_vals, *, interpret: bool = True):
     buckets = bucket_of(qkeys, bucket_keys.shape[0])
     return tac_probe_kernel(qkeys.astype(jnp.int32), buckets,
                             bucket_keys, bucket_vals, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def tac_probe_counted(qkeys, bucket_keys, bucket_vals, *,
+                      interpret: bool = True):
+    """Probe + device-side tallies for the observability plane
+    (DESIGN.md §12): returns ``(values, hit, way, counts)`` where
+    ``counts`` is an int32 ``[2]`` vector of (n_hit, n_conflict) reduced
+    on device in the same launch — a CONFLICT is a miss whose bucket is
+    already full, i.e. admitting the key would evict.  One device->host
+    transfer surfaces both tallies instead of a host-side scan of the
+    per-query hit vector."""
+    buckets = bucket_of(qkeys, bucket_keys.shape[0])
+    vals, hit, way = tac_probe_kernel(qkeys.astype(jnp.int32), buckets,
+                                      bucket_keys, bucket_vals,
+                                      interpret=interpret)
+    full = jnp.all(bucket_keys[buckets] != -1, axis=1)
+    miss = hit == 0
+    counts = jnp.stack([hit.sum(), (miss & full).sum()]).astype(jnp.int32)
+    return vals, hit, way, counts

@@ -1,0 +1,35 @@
+"""Unified observability plane (DESIGN.md §12): metrics registry with
+streaming quantile sketches, per-tuple critical-path tracing, and
+prefetch-quality (hint timeliness/accuracy) telemetry."""
+from repro.obs.quality import PrefetchRecorder
+from repro.obs.registry import (
+    METRIC_CATALOG,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_COUNTER,
+    NULL_GAUGE,
+    NULL_HISTOGRAM,
+    QuantileSketch,
+    matches_catalog,
+)
+from repro.obs.trace import STAGES, Tracer, TupleTrace, attach
+
+__all__ = [
+    "METRIC_CATALOG",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_COUNTER",
+    "NULL_GAUGE",
+    "NULL_HISTOGRAM",
+    "PrefetchRecorder",
+    "QuantileSketch",
+    "matches_catalog",
+    "STAGES",
+    "Tracer",
+    "TupleTrace",
+    "attach",
+]

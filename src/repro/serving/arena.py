@@ -21,7 +21,9 @@ import numpy as np
 
 from repro.core import tac_jax
 from repro.kernels.page_gather.ops import page_gather, page_scatter
-from repro.kernels.tac_probe.ops import bucket_of, tac_probe
+from repro.kernels.tac_probe.ops import (bucket_of, tac_probe,
+                                         tac_probe_counted)
+from repro.obs import NULL_COUNTER
 
 
 class Admitted(NamedTuple):
@@ -52,10 +54,20 @@ class PagedStateArena:
             for name, (shape, dtype) in pools.items()}
         self.hits = 0
         self.misses = 0
+        self.conflicts = 0
         self.admits = 0
         self.evictions = 0
         self.dirty_evictions = 0
         self.staged_pages = 0
+        self._c_hits = self._c_misses = self._c_conflicts = NULL_COUNTER
+
+    def bind_registry(self, registry) -> None:
+        """Publish device probe tallies into a MetricsRegistry
+        (DESIGN.md §12)."""
+        self._c_hits = registry.counter("serving.arena.probe.hits")
+        self._c_misses = registry.counter("serving.arena.probe.misses")
+        self._c_conflicts = registry.counter(
+            "serving.arena.probe.conflicts")
 
     # -------------------------------------------------------------- probing
     def probe(self, keys: jax.Array, now_ts: Optional[jax.Array] = None,
@@ -69,8 +81,15 @@ class PagedStateArena:
         keys = jnp.asarray(keys, jnp.int32)
         if keys.shape[0] == 0:                # empty batch: nothing to probe
             return (np.zeros((0,), bool), np.zeros((0,), np.int32))
-        _, hit_d, way = tac_probe(keys, self.tac.keys, self.tac.vals,
-                                  interpret=self.interpret)
+        if count:
+            # counted variant: hit/conflict tallies reduced ON DEVICE in
+            # the same launch feed the registry (DESIGN.md §12)
+            _, hit_d, way, tallies = tac_probe_counted(
+                keys, self.tac.keys, self.tac.vals,
+                interpret=self.interpret)
+        else:
+            _, hit_d, way = tac_probe(keys, self.tac.keys, self.tac.vals,
+                                      interpret=self.interpret)
         bucket_d = bucket_of(keys, self.n_buckets)
         if now_ts is not None:                # access: refresh hit ts
             safe = jnp.maximum(way, 0)
@@ -83,8 +102,13 @@ class PagedStateArena:
         bucket = np.asarray(bucket_d)
         slots = np.where(hit, bucket * self.ways + np.asarray(way), -1)
         if count:
-            self.hits += int(hit.sum())
-            self.misses += int((~hit).sum())
+            n_hit, n_conflict = (int(x) for x in np.asarray(tallies))
+            self.hits += n_hit
+            self.misses += len(hit) - n_hit
+            self.conflicts += n_conflict
+            self._c_hits.inc(n_hit)
+            self._c_misses.inc(len(hit) - n_hit)
+            self._c_conflicts.inc(n_conflict)
         return hit, slots.astype(np.int32)
 
     def count_access(self, hits: int, misses: int) -> None:
@@ -92,6 +116,8 @@ class PagedStateArena:
         ``count=False`` and decide afterwards what constituted an access."""
         self.hits += int(hits)
         self.misses += int(misses)
+        self._c_hits.inc(int(hits))
+        self._c_misses.inc(int(misses))
 
     def page_table(self, keys: jax.Array) -> Tuple[np.ndarray, jax.Array]:
         """keys [B, P] -> (hit [B, P], table [B, P] slot ids) for
@@ -201,6 +227,7 @@ class PagedStateArena:
         tot = self.hits + self.misses
         return {"arena_hits": self.hits, "arena_misses": self.misses,
                 "arena_hit_rate": self.hits / tot if tot else 0.0,
+                "arena_conflicts": self.conflicts,
                 "arena_admits": self.admits,
                 "arena_evictions": self.evictions,
                 "arena_dirty_evictions": self.dirty_evictions,

@@ -20,6 +20,8 @@ from repro.core.policies import ClockCache, LRUCache
 from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
                                  PrefetchingManager)
 from repro.core.tac import TimestampAwareCache
+from repro.obs import (MetricsRegistry, PrefetchRecorder, QuantileSketch,
+                       Tracer)
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
                                     Tuple_, Watermark)
@@ -446,7 +448,8 @@ class MapOp(Operator):
             self.hints_suppressed += 1
         else:
             self.hints_emitted += 1
-            self.emit_hint(sub, Hint(k, o.ts, origin=self.name))
+            self.emit_hint(sub, Hint(k, o.ts, origin=self.name,
+                                     emit_t=self.sim.t))
         return HINT_COST
 
     def process(self, sub: int, tup: Tuple_) -> Optional[float]:
@@ -456,6 +459,8 @@ class MapOp(Operator):
             return svc
         outs = out if isinstance(out, list) else [out]
         for o in outs:
+            if tup.trace is not None and o.trace is None:
+                o.trace = tup.trace        # sampled span rides derived tuples
             if self.hint_active and self.key_of is not None:
                 svc += self._emit_hints_for(sub, o)
             self.emit(sub, o)
@@ -522,6 +527,9 @@ class SourceOp(Operator):
         ts = rec[3] if len(rec) > 3 else (lt if self.replayable else now)
         tup = Tuple_(ts=ts, key=rec[0], payload=rec[1], size=rec[2],
                      ingest_t=now)
+        tracer = self.engine.tracer
+        if tracer.sample_every:            # span sampling (off by default)
+            tup.trace = tracer.maybe_start(now)
         if ts > self._max_ts[sub]:
             self._max_ts[sub] = ts
         self.processed += 1
@@ -687,6 +695,21 @@ class StatefulOp(Operator):
         # event-time lateness horizon for hint admission (windowed
         # subclasses widen it); with wm at -inf nothing is ever late
         self.hint_lateness = 0.0
+        # prefetch-quality telemetry (DESIGN.md §12): one recorder for
+        # all subtasks bridges TAC staged/used/wasted outcomes and the
+        # I/O layer's late stagings into the metrics registry
+        self.recorder = PrefetchRecorder(engine.registry,
+                                         f"engine.{name}",
+                                         lambda: engine.sim.t)
+        self.access_hist = engine.registry.histogram(
+            f"engine.{name}.access.latency")
+        self.pf_demand = engine.registry.counter(
+            f"engine.{name}.prefetch.demand_fetches")
+        self._attach_obs()
+        # first-park processing time per key: the "first need" timestamp
+        # a late staging's negative lead time is measured against
+        self._park_t: List[Dict[Any, float]] = \
+            [dict() for _ in range(parallelism)]
         self.io_free = [io_workers] * parallelism
         self.io_q: List[deque] = [deque() for _ in range(parallelism)]
         self.waiting: List[Dict[Any, List[Tuple_]]] = \
@@ -711,6 +734,16 @@ class StatefulOp(Operator):
         # CheckpointCoordinator is attached (the coordinator trims it at
         # each completed epoch).
         self.hint_log: List[List] = [[] for _ in range(parallelism)]
+
+    def _attach_obs(self) -> None:
+        """Wire the recorder into every TAC and the access-latency
+        histogram into every manager (re-run after reset_volatile
+        recreates the caches)."""
+        for c in self.caches:
+            if isinstance(c, TimestampAwareCache):
+                c.recorder = self.recorder
+        for m in self.managers:
+            m.lat_hist = self.access_hist
 
     def _new_cache(self):
         if self.policy == "tac":
@@ -835,6 +868,9 @@ class StatefulOp(Operator):
 
     def _on_hint(self, sub: int, h: Hint) -> float:
         mgr = self.managers[sub]
+        if h.emit_t:
+            # hint-channel delay: lookahead emit -> operator receive
+            self.recorder.on_channel_delay(self.sim.t - h.emit_t)
         if self.engine.coordinator is not None:
             # hint WAL for prefetch-warmed recovery (DESIGN.md §7)
             self.hint_log[sub].append((self.sim.t, h.key, h.ts))
@@ -851,8 +887,13 @@ class StatefulOp(Operator):
 
     def _on_data(self, sub: int, tup: Tuple_) -> float:
         cache = self.caches[sub]
+        tr = tup.trace
+        if tr is not None:
+            tr.mark_state(self.name, self.sim.t)
         state = cache.lookup(tup.key, tup.ts)
         if state is not None:
+            if tr is not None and tr.hit is None:
+                tr.hit = True
             if self.mode == "prefetch":
                 self.managers[sub].prefetch_hits += 1
                 if self.shards is not None:
@@ -863,9 +904,13 @@ class StatefulOp(Operator):
         if wb is not None:
             # key's latest state rides an in-flight write-back: a backend
             # fetch would read STALE data — serve from the memtable
+            if tr is not None and tr.hit is None:
+                tr.hit = True
             cache.insert(tup.key, wb.state, tup.ts, size=self.state_size)
             return self._apply(sub, tup, wb.state)
         # miss
+        if tr is not None and tr.hit is None:
+            tr.hit = False
         if self.mode == "prefetch" and not self.managers[sub].enabled:
             la = self.managers[sub].on_cache_misses(self.sim.t)
             if la is not None:
@@ -875,10 +920,18 @@ class StatefulOp(Operator):
             cache.insert(tup.key, state, tup.ts, size=self.state_size)
             self.managers[sub].record_access_latency(lat)
             self.blocked_time[sub] += lat
+            self.pf_demand.inc()
+            if tr is not None:
+                tr.fetch_s += lat
             return lat + self._apply(sub, tup, state)
         # async / prefetch: park the tuple, fetch if not already in flight
+        if tr is not None:
+            tr.mark_park(self.sim.t)
+        if tup.key not in self._park_t[sub]:
+            self._park_t[sub][tup.key] = self.sim.t
         self.waiting[sub][tup.key].append(tup)
         if tup.key not in self.in_flight[sub]:
+            self.pf_demand.inc()
             self._io_enqueue(sub, _IOReq("read", tup.key, tup.ts),
                              front=True)
         # completed-fetch scanning cost grows with outstanding async ops
@@ -951,12 +1004,14 @@ class StatefulOp(Operator):
             mgr.hints.complete(req.key)
             mgr.hints.discard(req.key)
             self.in_flight[sub].discard(req.key)
+            self._park_t[sub].pop(req.key, None)
         elif self._completion_dead(sub, req):
             # the pane was purged while this fetch was in flight: drop
             # the completion, and anything parked on it is late
             mgr.hints.complete(req.key)
             mgr.hints.discard(req.key)
             self.in_flight[sub].discard(req.key)
+            self._park_t[sub].pop(req.key, None)
             for tup in self.waiting[sub].pop(req.key, []):
                 self._on_dead_parked(sub, tup)
         else:
@@ -968,14 +1023,23 @@ class StatefulOp(Operator):
             mgr.hints.discard(req.key)    # clear any stale unprocessed entry
             self.in_flight[sub].discard(req.key)
             prefetched = req.kind == "prefetch"
+            timely = prefetched and req.key not in self.waiting[sub]
             ts = hint_ts if hint_ts is not None else req.hint_ts
             cache.insert(req.key, state, ts, size=self.state_size,
-                         prefetched=prefetched and req.key not in
-                         self.waiting[sub], origin=req.origin)
+                         prefetched=timely, origin=req.origin)
+            if prefetched:
+                self.recorder.on_stage_latency(lat)
+                if not timely:
+                    # a tuple parked on the key before staging completed:
+                    # the hint was accurate but NOT timely — negative
+                    # lead time against the first park
+                    self.recorder.on_late(
+                        self._park_t[sub].get(req.key, self.sim.t))
             if req.kind == "read" or req.key in self.waiting[sub]:
                 mgr.record_access_latency(lat)
             # wake parked tuples
             parked = self.waiting[sub].pop(req.key, None)
+            self._park_t[sub].pop(req.key, None)
             if parked:
                 self.ready[sub].extend(parked)
                 self._kick(sub)
@@ -996,12 +1060,32 @@ class StatefulOp(Operator):
             self.caches[sub].write(tup.key, new_state, tup.ts,
                                    size=self.state_size)
             self._io_kick(sub)             # opportunistic write-back
+        tr = tup.trace
+        if tr is not None:
+            tr.mark_apply(self.sim.t)
         for o in outputs:
             self.outputs += 1
+            if tr is not None and getattr(o, "trace", None) is None:
+                o.trace = tr
             self.emit(sub, o)
+        if not outputs:
+            self._trace_absorbed(tr)
         return self.service_time
 
+    def _trace_absorbed(self, tr) -> None:
+        """Finalize a sampled tuple CONSUMED into operator state with no
+        1:1 output (windowed aggregation, unmatched join probe, late
+        drop): its critical path ends at apply — a later window fire or
+        join match is a different tuple's emission, not the tail of this
+        one's span (DESIGN.md §12)."""
+        if tr is not None:
+            tr.mark_apply(self.sim.t)   # downstream = 0 for absorbed spans
+            self.engine.tracer.finish(tr, self.sim.t)
+
     def handle_parked(self, sub: int, tup: Tuple_) -> float:
+        tr = tup.trace
+        if tr is not None:
+            tr.mark_resume(self.sim.t)
         state = self.caches[sub].lookup(tup.key, tup.ts)
         refetch = 0.0
         if state is None:
@@ -1019,6 +1103,9 @@ class StatefulOp(Operator):
                                     size=self.state_size)
             self.managers[sub].record_access_latency(refetch)
             self.blocked_time[sub] += refetch
+            self.pf_demand.inc()
+            if tr is not None:
+                tr.fetch_s += refetch
         return ASYNC_RESUME + refetch + self._apply(sub, tup, state)
 
     def _start(self, sub: int) -> None:
@@ -1139,6 +1226,8 @@ class StatefulOp(Operator):
         super().reset_volatile()
         p = self.parallelism
         self.caches = [self._new_cache() for _ in range(p)]
+        self._attach_obs()
+        self._park_t = [dict() for _ in range(p)]
         self.waiting = [defaultdict(list) for _ in range(p)]
         self.in_flight = [set() for _ in range(p)]
         self.wb_pending = [dict() for _ in range(p)]
@@ -1181,9 +1270,22 @@ class Engine:
         self.operators: Dict[str, Operator] = {}
         self._candidate_ops: Dict[str, List[str]] = {}
         self.order: List[str] = []
-        self.latencies: List[float] = []
-        self.latency_t: List[float] = []      # sink time per latency sample
+        # observability plane (DESIGN.md §12): the registry is the one
+        # sink for every counter/gauge/histogram; the tracer samples
+        # per-tuple critical-path spans (off unless enable_tracing)
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(self.registry)
+        self._export_path: Optional[str] = None
+        self._export_interval = 0.0
+        # sink latency: percentiles come from the UNCAPPED streaming
+        # sketch (no truncation bias); the bounded deques keep the most
+        # RECENT samples for timeline slicing (recovery/sharding
+        # benchmarks cut windows around an injected event)
         self.latency_cap = 2_000_000
+        self.latencies: deque = deque(maxlen=self.latency_cap)
+        self.latency_t: deque = deque(maxlen=self.latency_cap)
+        self._sink_hist = self.registry.histogram("engine.sink.latency")
+        self._sink_count = self.registry.counter("engine.sink.count")
         self._marker_ids = itertools.count()
         self.marker_interval = marker_interval
         self.lookahead_timeline: List[Tuple[float, str]] = []
@@ -1279,9 +1381,33 @@ class Engine:
 
     # -------------------------------------------------------------- running
     def record_latency(self, now: float, tup: Tuple_) -> None:
-        if len(self.latencies) < self.latency_cap:
-            self.latencies.append(now - tup.ingest_t)
-            self.latency_t.append(now)
+        lat = now - tup.ingest_t
+        self.latencies.append(lat)
+        self.latency_t.append(now)
+        self._sink_hist.observe(lat)
+        self._sink_count.inc()
+        if tup.trace is not None:
+            self.tracer.finish(tup.trace, now)
+
+    # -------------------------------------------------- observability plane
+    def enable_tracing(self, sample_every: int = 64) -> None:
+        """Turn on per-tuple critical-path span sampling (DESIGN.md §12):
+        every Nth source tuple carries a TupleTrace finalized at the
+        sink.  Off by default — the disabled cost is one flag check per
+        source tuple."""
+        self.tracer.enable(sample_every)
+
+    def enable_export(self, path: str, interval: float = 1.0) -> None:
+        """Append a registry snapshot line to ``path`` every ``interval``
+        sim seconds (JSONL: ``{"t": ..., "metrics": {...}}``)."""
+        self._export_path = path
+        self._export_interval = interval
+        self.sim.after(interval, self._export_tick)
+
+    def _export_tick(self) -> None:
+        self._sync_registry()
+        self.registry.export_jsonl(self._export_path, t=self.sim.t)
+        self.sim.after(self._export_interval, self._export_tick)
 
     def trigger_checkpoint(self, checkpoint_id: int) -> None:
         """Inject an epoch's barriers at every source subtask (each
@@ -1344,21 +1470,30 @@ class Engine:
             self.sim.run_until(warmup)
             self.latencies.clear()
             self.latency_t.clear()
+            # latency percentiles cover the measured window only: reset
+            # the sink sketch/count and drop warmup-sampled spans (the
+            # cumulative hint/cache counters intentionally keep counting
+            # across warmup, exactly like before)
+            self._sink_hist.sketch = QuantileSketch()
+            self._sink_count.value = 0
+            self.tracer.reset()
         self.sim.run_until(warmup + duration)
         return self.metrics(duration, warmup)
 
     # -------------------------------------------------------------- metrics
     def metrics(self, duration: float, warmup: float) -> Dict[str, Any]:
-        import numpy as np
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        sk = self._sink_hist.sketch
+        n = self._sink_count.value
+        # percentiles from the UNCAPPED streaming sketch — the bounded
+        # `latencies` deque would bias long runs toward recent samples
         out = {
-            "n_outputs": len(self.latencies),
-            "throughput": len(self.latencies) / duration,
-            "p50": float(np.percentile(lat, 50)),
-            "p90": float(np.percentile(lat, 90)),
-            "p99": float(np.percentile(lat, 99)),
-            "p999": float(np.percentile(lat, 99.9)),
-            "max": float(lat.max()),
+            "n_outputs": n,
+            "throughput": n / duration,
+            "p50": sk.quantile(0.50),
+            "p90": sk.quantile(0.90),
+            "p99": sk.quantile(0.99),
+            "p999": sk.quantile(0.999),
+            "max": sk.vmax if n else 0.0,
         }
         busy = sum(sum(op.busy_time) for op in self.operators.values())
         slots = sum(op.parallelism for op in self.operators.values())
@@ -1397,6 +1532,27 @@ class Engine:
                     m.hints_received for m in op.managers)
                 out[f"{name}_hints_late"] = sum(
                     m.hints_late for m in op.managers)
+                out[f"{name}_hints_duplicate"] = sum(
+                    m.hints_duplicate for m in op.managers)
+                # hint timeliness/accuracy rollup (DESIGN.md §12): the
+                # per-hint outcome split, signed lead times, and the
+                # precision/recall headline ratios
+                out[f"{name}_hint_quality"] = op.recorder.quality_block(
+                    out[f"{name}_prefetch_hits"],
+                    op.pf_demand.value,
+                    out[f"{name}_hints_duplicate"],
+                    out[f"{name}_hints_late"])
+                ev: Dict[str, int] = {}
+                for c in op.caches:
+                    for k, v in getattr(c, "eviction_block",
+                                        lambda: {})().items():
+                        ev[k] = ev.get(k, 0) + v
+                if ev:
+                    out[f"{name}_evictions"] = ev
+                lsk = op.access_hist.sketch
+                if lsk.count:
+                    out[f"{name}_access_p50"] = lsk.quantile(0.50)
+                    out[f"{name}_access_p99"] = lsk.quantile(0.99)
                 if op.shards is not None:
                     # per-shard routed-plane counters (DESIGN.md §9), not
                     # just the global totals above
@@ -1425,4 +1581,88 @@ class Engine:
                     out[f"{name}_{k}"] = v
             if any(w > float("-inf") for w in op.wm):
                 out[f"{name}_watermark"] = list(op.wm)
+                lag = self._wm_lag(op)
+                if lag is not None:
+                    out[f"{name}_watermark_lag"] = lag
+        if self.tracer.active:
+            # sampled critical-path breakdown (DESIGN.md §12)
+            out["trace"] = self.tracer.summary()
+        self._sync_registry()
         return out
+
+    def _wm_lag(self, op: Operator) -> Optional[float]:
+        """Event-time watermark lag: the source frontier (max emitted
+        event ts) minus the operator's slowest subtask watermark."""
+        frontier = max((m for s in self.operators.values()
+                        if isinstance(s, SourceOp) for m in s._max_ts),
+                       default=float("-inf"))
+        low = min(op.wm)
+        if frontier == float("-inf") or low == float("-inf"):
+            return None
+        return frontier - low
+
+    def _sync_registry(self) -> None:
+        """Mirror the operator-local counters into their catalogued
+        registry names (DESIGN.md §12).  Hot paths keep their plain-int
+        counters; this runs only at snapshot/export time, so the live
+        registry view stays consistent without taxing the data path."""
+        r = self.registry
+        data_bytes = hint_bytes = busy = 0.0
+        slots = 0
+        for name, op in self.operators.items():
+            for ch in op.out_data:
+                data_bytes += ch.bytes_sent
+            for ch in op.out_hint:
+                hint_bytes += ch.bytes_sent
+            busy += sum(op.busy_time)
+            slots += op.parallelism
+            pre = f"engine.{name}"
+            r.counter(f"{pre}.processed").set(op.processed)
+            elapsed = max(self.sim.t, 1e-12)
+            r.gauge(f"{pre}.busy_frac").set(
+                sum(op.busy_time) / (op.parallelism * elapsed))
+            r.gauge(f"{pre}.queue.depth").set(
+                sum(len(q) for q in op.queues)
+                + sum(len(q) for q in getattr(op, "ready", [])))
+            lag = self._wm_lag(op)
+            if lag is not None:
+                r.gauge(f"{pre}.watermark.lag").set(lag)
+            if not isinstance(op, StatefulOp):
+                continue
+            r.counter(f"{pre}.cache.hits").set(
+                sum(c.hits for c in op.caches))
+            r.counter(f"{pre}.cache.misses").set(
+                sum(c.misses for c in op.caches))
+            r.counter(f"{pre}.backend.reads").set(
+                sum(b.reads for b in op.backends))
+            r.counter(f"{pre}.backend.writes").set(
+                sum(b.writes for b in op.backends))
+            r.counter(f"{pre}.hints.received").set(
+                sum(m.hints_received for m in op.managers))
+            r.counter(f"{pre}.hints.late").set(
+                sum(m.hints_late for m in op.managers))
+            r.counter(f"{pre}.hints.duplicate").set(
+                sum(m.hints_duplicate for m in op.managers))
+            r.counter(f"{pre}.prefetch.hits").set(
+                sum(m.prefetch_hits for m in op.managers))
+            ev: Dict[str, int] = {}
+            for c in op.caches:
+                for k, v in getattr(c, "eviction_block",
+                                    lambda: {})().items():
+                    ev[k] = ev.get(k, 0) + v
+            for k, v in ev.items():
+                r.counter(f"{pre}.evict.{k}").set(v)
+            if op.shards is not None:
+                op.shards.registry_sync(r, pre, op.shard_pending)
+        r.counter("engine.net.data_bytes").set(int(data_bytes))
+        r.counter("engine.net.hint_bytes").set(int(hint_bytes))
+        r.gauge("engine.cpu.util").set(
+            busy / max(1e-12, slots * self.sim.t))
+        if self.snapshots_taken:
+            r.counter("checkpoint.snapshots_taken").set(self.snapshots_taken)
+            r.gauge("checkpoint.align_stall_total").set(
+                self.align_stall_total)
+            r.gauge("checkpoint.align_stall_max").set(self.align_stall_max)
+            r.counter("checkpoint.align_buffered").set(self.align_buffered)
+        if self.coordinator is not None:
+            self.coordinator.registry_sync(r)

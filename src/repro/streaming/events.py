@@ -12,6 +12,9 @@ class Tuple_:
     payload: Any = None
     size: int = 200           # serialized bytes (network accounting)
     ingest_t: float = 0.0     # processing time entering the pipeline
+    trace: Any = None         # sampled critical-path span (obs.trace), or
+    #                           None on the unsampled fast path — not
+    #                           serialized, never crosses a checkpoint
 
 
 class WindowKey(NamedTuple):
@@ -49,6 +52,8 @@ class Hint:
     ts: float                 # predicted access timestamp (see above)
     origin: str = ""          # lookahead operator that emitted the hint
     size: int = 24            # key + timestamp on the wire
+    emit_t: float = 0.0       # processing time the lookahead emitted it
+    #                           (hint-channel delay telemetry, DESIGN.md §12)
 
 
 @dataclass

@@ -143,6 +143,7 @@ class IntervalJoinOp(StatefulOp):
             # parked across the horizon while its fetch was in flight:
             # its interval is closed, the match set unrecoverable
             self.late_dropped += 1
+            self._trace_absorbed(tup.trace)
             return self.service_time
         horizon = wm - self.allowed_lateness
         # the state dict is owned exclusively by this subtask's cache/
@@ -164,6 +165,7 @@ class IntervalJoinOp(StatefulOp):
                 self.entries_pruned += i
         other = RIGHT if side == LEFT else LEFT
         late = tup.ts < wm                   # joining behind the watermark
+        emitted = False
         for ts2, p2 in st[other]:
             if self._entry_deadline(other, ts2) < horizon:
                 continue                     # straggler awaiting reclaim
@@ -177,8 +179,12 @@ class IntervalJoinOp(StatefulOp):
                     if late:
                         self.late_joins += 1
                     self.outputs += 1
+                    emitted = True
                     self.emit(sub, Tuple_(tup.ts, tup.key, payload,
-                                          self.out_size, tup.ingest_t))
+                                          self.out_size, tup.ingest_t,
+                                          trace=tup.trace))
+        if not emitted:
+            self._trace_absorbed(tup.trace)  # probe matched nothing (yet)
         if self.keep_fn is None or self.keep_fn(side, tup.payload):
             st[side].append((tup.ts, tup.payload))
         # the registry learns the key even when keep_fn declines the

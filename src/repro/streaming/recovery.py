@@ -282,6 +282,20 @@ class CheckpointCoordinator:
             "interval": self.interval,
         }
 
+    def registry_sync(self, registry) -> None:
+        """Mirror the checkpoint/recovery-plane counters into the
+        metrics registry (``checkpoint.*`` / ``recovery.*``, DESIGN.md
+        §12); called by ``Engine._sync_registry``."""
+        registry.counter("checkpoint.completed").set(self.epochs_completed)
+        registry.counter("checkpoint.bytes").set(self.snapshot_bytes_total)
+        if self.recoveries:
+            rb = self.recovery_block()
+            registry.counter("recovery.count").set(rb["failures"])
+            registry.counter("recovery.warmup_hints").set(
+                rb["warmup_hints"])
+            registry.gauge("recovery.restore_s").set(
+                rb.get("last_downtime", 0.0))
+
     # ----------------------------------------------------- failure / recovery
     def fail(self, mode: str = "warmed", down_time: float = 0.05,
              replay_speedup: float = 4.0,

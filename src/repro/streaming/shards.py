@@ -116,3 +116,19 @@ class ShardPlane:
             "misroutes": self.misroutes,
             "parked_in_migration": self.parked_in_migration,
         }
+
+    def registry_sync(self, registry, prefix: str,
+                      pending: Optional[Dict[int, list]] = None) -> None:
+        """Mirror the routed-plane counters into the metrics registry
+        under ``<prefix>.shard.<i>.*`` / ``<prefix>.shards.*``
+        (DESIGN.md §12); called by ``Engine._sync_registry`` at
+        snapshot/export time."""
+        for i in range(self.n_shards):
+            registry.counter(f"{prefix}.shard.{i}.hints_routed").set(
+                self.hints_routed[i])
+            registry.counter(f"{prefix}.shard.{i}.prefetch_hits").set(
+                self.prefetch_hits[i])
+            registry.gauge(f"{prefix}.shard.{i}.pending").set(
+                len(pending.get(i, [])) if pending else 0)
+        registry.counter(f"{prefix}.shards.misroutes").set(self.misroutes)
+        registry.counter(f"{prefix}.shards.migrations").set(self.migrations)

@@ -190,7 +190,9 @@ class WindowedStatefulOp(StatefulOp):
             n += 1
             svc += super()._on_data(sub, Tuple_(
                 tup.ts, WindowKey(tup.key, wid), tup.payload, tup.size,
-                tup.ingest_t))
+                tup.ingest_t, trace=tup.trace))
+        if not n:
+            self._trace_absorbed(tup.trace)  # dropped before any pane
         return svc if n else 5e-7
 
     def _apply(self, sub: int, tup: Tuple_, state: Any) -> float:
@@ -202,7 +204,7 @@ class WindowedStatefulOp(StatefulOp):
             if payload is not None:
                 self.outputs += 1
                 self.emit(sub, Tuple_(end, wk.base, payload, self.out_size,
-                                      tup.ingest_t))
+                                      tup.ingest_t, trace=tup.trace))
             if self.allowed_lateness == 0:
                 self._purge_pane(sub, wk)
             return self.service_time
@@ -214,8 +216,10 @@ class WindowedStatefulOp(StatefulOp):
             # its contribution can no longer reach the fired result (and
             # writing would resurrect a purged pane)
             self.late_dropped += 1
+            self._trace_absorbed(tup.trace)
             return self.service_time
         acc = self.agg_fn(tup, state)
+        emitted = False
         if meta is not None and meta["fired"]:
             # late-side update: re-emit the refreshed result immediately
             self.late_updates += 1
@@ -223,11 +227,15 @@ class WindowedStatefulOp(StatefulOp):
                                    self.assigner.end(wk.wid), acc)
             if payload is not None:
                 self.outputs += 1
+                emitted = True
                 self.emit(sub, Tuple_(tup.ts, wk.base, payload,
-                                      self.out_size, tup.ingest_t))
+                                      self.out_size, tup.ingest_t,
+                                      trace=tup.trace))
         if acc is not state:
             self.caches[sub].write(wk, acc, tup.ts, size=self.state_size)
             self._io_kick(sub)
+        if not emitted:
+            self._trace_absorbed(tup.trace)  # folded into the pane
         return self.service_time
 
     # ---------------------------------------------------------------- firing

@@ -16,7 +16,12 @@ its headline advantage on the (smoke) config it was run with:
   * recovery (``BENCH_recovery*.json``): for every query present,
     warmed recovery's post-restore p99 spike must be <= cold recovery's,
     and the recovered (warmed) run's steady-state p99 must be <= 1.2x
-    the unfailed run's steady-state p99 (ISSUE 5 acceptance).
+    the unfailed run's steady-state p99 (ISSUE 5 acceptance);
+  * obs (``BENCH_obs*.json``): tracing-enabled WALL-CLOCK throughput
+    must be >= 0.95x disabled (the observability plane's overhead
+    contract, ISSUE 6), the traced run must report a dominant
+    critical-path stage, and its hint-quality block must have staged
+    hints with precision/recall in (0, 1].
 
 Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
 """
@@ -122,6 +127,35 @@ def gate_recovery(data: dict, fails: list, name: str) -> None:
                          f"1.2x unfailed ({u:.4f}s)")
 
 
+def gate_obs(data: dict, fails: list, name: str) -> None:
+    dis, tr = data.get("disabled"), data.get("traced")
+    if not dis or not tr:
+        fails.append(f"{name}: missing disabled/traced results")
+        return
+    d, t = dis["tuples_per_s"], tr["tuples_per_s"]
+    ratio = t / d if d else 0.0
+    ok = ratio >= 0.95
+    print(f"  obs: traced {t:.0f} tup/s vs disabled {d:.0f} tup/s "
+          f"(x{ratio:.3f}, floor 0.95) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        fails.append(f"{name}: traced throughput x{ratio:.3f} of "
+                     f"disabled (< 0.95)")
+    trace = tr.get("trace", {})
+    if not trace.get("dominant_stage"):
+        fails.append(f"{name}: traced run has no dominant stage "
+                     f"(no spans finished?)")
+    hq = tr.get("hint_quality", {})
+    prec, rec = hq.get("precision", 0.0), hq.get("recall", 0.0)
+    ok = hq.get("staged", 0) > 0 and 0.0 < prec <= 1.0 and 0.0 < rec <= 1.0
+    print(f"  obs: staged={hq.get('staged', 0)} precision={prec:.3f} "
+          f"recall={rec:.3f} dominant={trace.get('dominant_stage')} -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        fails.append(f"{name}: hint-quality block empty or degenerate "
+                     f"(staged={hq.get('staged', 0)}, precision={prec}, "
+                     f"recall={rec})")
+
+
 def main(argv) -> int:
     if not argv:
         print("usage: bench_gate.py BENCH_*.json ...")
@@ -147,6 +181,8 @@ def main(argv) -> int:
             gate_joins(data, fails, name)
         elif "recovery" in name:
             gate_recovery(data, fails, name)
+        elif "obs" in name:
+            gate_obs(data, fails, name)
         else:
             fails.append(f"{name}: no gate rule for this artifact")
     if fails:

@@ -17,6 +17,10 @@ Fails when:
     ``## §N`` heading in ``DESIGN.md``;
   * a checked-in ``BENCH_*.json`` is unparseable, empty, or missing its
     ``config`` block / result entries (schema check);
+  * a backticked metric name in DESIGN.md's §12 section (dotted,
+    ``engine.sink.latency``-style, ``<x>`` wildcards allowed) is not a
+    template in ``repro.obs.METRIC_CATALOG`` — the metric table and the
+    registry catalog must stay in lockstep;
   * ``CHANGES.md`` lacks an entry for the current PR number (taken from
     the ``# ISSUE <n>`` heading of ``ISSUE.md``, when present).
 
@@ -144,6 +148,48 @@ def check_bench_schemas(fails: list) -> int:
     return n
 
 
+METRIC_RE = re.compile(
+    r"(?:[a-z0-9_]+|<[a-z_]+>)(?:\.(?:[a-z0-9_]+|<[a-z_]+>)){1,}")
+
+
+def check_metric_catalog(fails: list) -> int:
+    """Every backticked metric-name template cited in DESIGN.md's §12
+    section must exist in ``repro.obs.METRIC_CATALOG`` (the registry's
+    name contract).  ``repro.obs.registry`` is deliberately stdlib-only
+    so this check runs in the docs job without the jax toolchain."""
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        return 0
+    text = design.read_text()
+    m = re.search(r"^##\s*§12\b.*?(?=^##\s|\Z)", text, re.M | re.S)
+    if m is None:
+        return 0
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs.registry import METRIC_CATALOG
+    except Exception as e:                  # pragma: no cover
+        fails.append(f"DESIGN.md §12: cannot import repro.obs.registry "
+                     f"to verify metric names ({e})")
+        return 0
+    n = 0
+    for code in CODE_RE.findall(m.group(0)):
+        if not METRIC_RE.fullmatch(code):
+            continue                        # not a metric-shaped token
+        if code.startswith("repro.") or code.rsplit(".", 1)[-1] in (
+                "py", "md", "json", "jsonl", "yml", "yaml", "ini",
+                "toml", "txt"):
+            continue                        # module / file path, not a metric
+        n += 1
+        if code not in METRIC_CATALOG:
+            fails.append(f"DESIGN.md §12: metric `{code}` is not in "
+                         f"repro.obs.METRIC_CATALOG — fix the table or "
+                         f"add the template")
+    if n == 0:
+        fails.append("DESIGN.md §12: no backticked metric names found — "
+                     "the metric table is part of the §12 contract")
+    return n
+
+
 def check_changes(fails: list) -> None:
     """CHANGES.md must have an entry for the PR this tree is building
     (the ``# ISSUE <n>`` heading of ISSUE.md names it)."""
@@ -176,6 +222,7 @@ def main() -> int:
     check_bench_referenced(readme, fails)
     n_bench = check_bench_schemas(fails)
     n_cites = check_design_citations(fails)
+    n_metrics = check_metric_catalog(fails)
     check_changes(fails)
     if fails:
         print("docs check FAILED:")
@@ -183,7 +230,8 @@ def main() -> int:
             print(f"  - {f}")
         return 1
     print(f"docs check OK ({len(md_files)} markdown files, "
-          f"{n_bench} BENCH artifacts, {n_cites} DESIGN citations)")
+          f"{n_bench} BENCH artifacts, {n_cites} DESIGN citations, "
+          f"{n_metrics} §12 metric names)")
     return 0
 
 

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Render the observability plane's view of a run (DESIGN.md §12).
+
+Two modes:
+
+  * default — build the q5 smoke pipeline (same config as the windowing
+    benchmark's smoke tier), run it with per-tuple tracing enabled, and
+    print the critical-path latency breakdown: a per-stage table (count,
+    mean, p50, p99, total, share) with the DOMINANT stage flagged, the
+    hint-quality block (staged/used/wasted/late, precision, recall,
+    signed lead-time percentiles), and the eviction-reason split;
+  * ``--snapshot FILE.jsonl`` — read a registry export produced by
+    ``Engine.enable_export`` and print the last snapshot's metrics
+    (optionally filtered by ``--grep SUBSTRING``), plus the delta of
+    every counter between the first and last lines.
+
+    PYTHONPATH=src python tools/obs_report.py
+    PYTHONPATH=src python tools/obs_report.py --snapshot run.jsonl --grep prefetch
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def fmt_s(v: float) -> str:
+    """Seconds -> aligned ms string (lead times may be negative)."""
+    return f"{v * 1e3:9.3f}ms"
+
+
+def print_stage_table(trace: dict) -> None:
+    from repro.obs import STAGES
+    dom = trace.get("dominant_stage")
+    print(f"\ncritical-path stages ({trace.get('finished', 0)} sampled "
+          f"spans; probe hit/miss "
+          f"{trace.get('probe_hits', 0)}/{trace.get('probe_misses', 0)}):")
+    hdr = (f"  {'stage':<12s} {'count':>7s} {'mean':>11s} {'p50':>11s} "
+           f"{'p99':>11s} {'total':>10s} {'share':>6s}")
+    print(hdr)
+    print("  " + "-" * (len(hdr) - 2))
+    for s in STAGES:
+        st = trace.get(s)
+        if not st:
+            continue
+        flag = "  <- dominant" if s == dom else ""
+        print(f"  {s:<12s} {st['count']:>7d} {fmt_s(st['mean'])} "
+              f"{fmt_s(st['p50'])} {fmt_s(st['p99'])} "
+              f"{st['total']:>9.3f}s {st['share']:>6.1%}{flag}")
+    if dom:
+        print(f"  dominant stage: {dom} "
+              f"({trace[dom]['share']:.0%} of sampled critical-path time)")
+
+
+def print_quality(hq: dict, evictions: dict) -> None:
+    print("\nhint quality:")
+    for k in ("staged", "used", "wasted", "late", "late_watermark",
+              "duplicate", "resident_unused"):
+        if k in hq:
+            print(f"  {k:<16s} {hq[k]:>8d}")
+    print(f"  {'precision':<16s} {hq.get('precision', 0.0):>8.3f}   "
+          f"(used / staged+late)")
+    print(f"  {'recall':<16s} {hq.get('recall', 0.0):>8.3f}   "
+          f"(prefetch hits / all fetches)")
+    if "lead_p50" in hq:
+        print(f"  lead time p50 {fmt_s(hq['lead_p50'])}  "
+              f"p99 {fmt_s(hq['lead_p99'])}  "
+              f"min {fmt_s(hq['lead_min'])}  max {fmt_s(hq['lead_max'])}"
+              f"   (negative = staged too late)")
+    if evictions:
+        print("\nevictions (reason.admission):")
+        for k in sorted(evictions):
+            print(f"  {k:<24s} {evictions[k]:>8d}")
+
+
+def run_report(args) -> int:
+    from repro.streaming.backend import LOCAL_NVME
+    from repro.streaming.nexmark import NexmarkConfig, build_query
+
+    cfg = NexmarkConfig(rate=5_000.0, active_window=1.0, oo_bound=0.3,
+                        seed=args.seed)
+    eng = build_query("q5", "tac", "prefetch", cfg,
+                      cache_entries=256, backend=LOCAL_NVME,
+                      parallelism=2, source_parallelism=1, io_workers=4,
+                      buffer_timeout=0.002, hint_ts="deadline",
+                      window_size=1.0, window_slide=0.5)
+    eng.enable_tracing(sample_every=args.sample_every)
+    if args.export:
+        eng.enable_export(args.export, interval=0.5)
+    m = eng.run(duration=args.duration, warmup=args.warmup)
+
+    print(f"q5 smoke (deadline hints, {args.duration:.0f}s sim, "
+          f"1-in-{args.sample_every} tracing):")
+    print(f"  outputs {m['n_outputs']}  p50 {fmt_s(m['p50']).strip()}  "
+          f"p99 {fmt_s(m['p99']).strip()}  "
+          f"hit rate {m.get('stateful_hit_rate', 0.0):.2f}")
+    print_stage_table(m.get("trace", {}))
+    print_quality(m.get("stateful_hint_quality", {}),
+                  m.get("stateful_evictions", {}))
+    if args.export:
+        print(f"\nregistry snapshots appended to {args.export}")
+    return 0
+
+
+def snapshot_report(path: str, grep: str) -> int:
+    lines = []
+    with open(path) as f:
+        for raw in f:
+            raw = raw.strip()
+            if raw:
+                lines.append(json.loads(raw))
+    if not lines:
+        print(f"{path}: no snapshots")
+        return 1
+    first, last = lines[0]["metrics"], lines[-1]["metrics"]
+    print(f"{path}: {len(lines)} snapshots, "
+          f"t={lines[0]['t']}..{lines[-1]['t']}")
+    for name in sorted(last):
+        if grep and grep not in name:
+            continue
+        v = last[name]
+        if isinstance(v, dict):        # histogram summary
+            print(f"  {name:<44s} count={v.get('count', 0):>7} "
+                  f"mean={v.get('mean', 0.0):.6g} "
+                  f"p99={v.get('p99', 0.0):.6g}")
+        else:
+            d = v - first.get(name, 0) if isinstance(v, (int, float)) \
+                and isinstance(first.get(name), (int, float)) else None
+            delta = f" (+{d:g})" if d else ""
+            print(f"  {name:<44s} {v:g}{delta}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshot", metavar="FILE.jsonl",
+                    help="report on a registry JSONL export instead of "
+                         "running the q5 smoke pipeline")
+    ap.add_argument("--grep", default="",
+                    help="with --snapshot: only metrics containing this")
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--warmup", type=float, default=1.5)
+    ap.add_argument("--sample-every", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--export", metavar="FILE.jsonl",
+                    help="also append registry snapshots during the run")
+    args = ap.parse_args()
+    if args.snapshot:
+        return snapshot_report(args.snapshot, args.grep)
+    return run_report(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
