@@ -1,10 +1,11 @@
 from repro.core.cms import CountMinFilter
+from repro.core.hint_filter import HintFilter
 from repro.core.hints import HintsBuffer
 from repro.core.policies import ClockCache, LRUCache
 from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
                                  PrefetchingManager)
 from repro.core.tac import TimestampAwareCache
 
-__all__ = ["CountMinFilter", "HintsBuffer", "ClockCache", "LRUCache",
-           "LookaheadCandidate", "PrefetchingController",
+__all__ = ["CountMinFilter", "HintFilter", "HintsBuffer", "ClockCache",
+           "LRUCache", "LookaheadCandidate", "PrefetchingController",
            "PrefetchingManager", "TimestampAwareCache"]

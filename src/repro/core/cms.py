@@ -77,6 +77,33 @@ class CountMinFilter:
             self._since_aging = 0
         return hot
 
+    def update(self, key: int) -> tuple:
+        """Count one occurrence; return ``(estimate, hot)`` where
+        ``estimate`` is the post-update count-min estimate (min over
+        rows, saturating) and ``hot`` matches ``update_and_classify``.
+        The selective HintFilter (core/hint_filter.py) needs the
+        estimate for its cold/priority thresholds, not just the hot bit
+        — same single pass over the d touched counters."""
+        flat = self._flat
+        w = self.w
+        thr = self.threshold
+        mx = self.max_count
+        est = mx + 1
+        for i, c in enumerate(self._cols(key)):
+            j = i * w + c
+            v = flat[j] + 1
+            if v <= mx:
+                flat[j] = v
+            else:
+                v = mx
+            if v < est:
+                est = v
+        self._since_aging += 1
+        if self._since_aging >= self.aging_interval:
+            self.counters >>= 1
+            self._since_aging = 0
+        return int(est), est >= thr
+
     def estimate(self, key: int) -> int:
         flat = self._flat
         return int(min(flat[i * self.w + c]

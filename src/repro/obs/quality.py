@@ -19,6 +19,16 @@ Every hint that reaches a stateful operator ends in exactly one outcome:
     ``prefetch_unused_evicted`` path, now with lead/registry accounting).
   * still-resident — staged, not yet read, still cached at snapshot time
     (derived: ``staged - used - wasted``).
+  * ``suppressed`` — the lookahead's HintFilter (DESIGN.md §13) dropped
+    the hint at the source; it never reached the channel.  Resolved
+    retroactively by the NEXT access to the key at the stateful operator:
+    a hit within the horizon = ``suppress_resident`` (correct — the key
+    was cached, the hint would have been a duplicate), a miss within the
+    horizon = ``suppress_miss`` (incorrect — the suppression cost a
+    demand fetch), no access within ``suppress_horizon`` =
+    ``suppress_unused`` (correct — the hint would have been wasted
+    anyway).  Invariant: ``suppressed == suppress_resident +
+    suppress_miss + suppress_unused + suppress_pending``.
 
 From these, ``quality_block`` derives the two headline ratios every
 benchmark now reports next to p99:
@@ -47,7 +57,8 @@ class PrefetchRecorder:
     quantities even when the cache orders by event time."""
 
     def __init__(self, registry: MetricsRegistry, prefix: str,
-                 now_fn: Callable[[], float]):
+                 now_fn: Callable[[], float],
+                 suppress_horizon: float = 1.0):
         self.now = now_fn
         self.staged = registry.counter(f"{prefix}.prefetch.staged")
         self.used = registry.counter(f"{prefix}.prefetch.used")
@@ -58,6 +69,20 @@ class PrefetchRecorder:
             f"{prefix}.prefetch.stage_latency")
         self.channel_delay = registry.histogram(
             f"{prefix}.hints.channel_delay")
+        # suppression plane (DESIGN.md §13): HintFilter verdicts graded
+        # against what the stateful operator actually did next
+        self.suppressed = registry.counter(f"{prefix}.prefetch.suppressed")
+        self.suppress_resident = registry.counter(
+            f"{prefix}.prefetch.suppress_resident")
+        self.suppress_miss = registry.counter(
+            f"{prefix}.prefetch.suppress_miss")
+        self.suppress_unused = registry.counter(
+            f"{prefix}.prefetch.suppress_unused")
+        self.suppress_horizon = suppress_horizon
+        # key -> [first suppression time, suppression count]; the access
+        # path checks truthiness of this dict before paying a lookup
+        self.pending_suppressed: Dict[Any, list] = {}
+        self._since_expire = 0
 
     # ---- TAC-side hooks (core/tac.py calls these when a recorder is set)
     def on_staged(self) -> None:
@@ -88,6 +113,57 @@ class PrefetchRecorder:
     def on_channel_delay(self, delay: float) -> None:
         self.channel_delay.observe(delay)
 
+    # ---- suppression hooks (lookahead HintFilter + StatefulOp access path)
+    def on_suppressed(self, key: Any) -> None:
+        """The lookahead suppressed a hint for ``key``.  Repeated
+        suppressions of one key fold into a single pending entry (they
+        all share the outcome of the next access)."""
+        self.suppressed.inc()
+        now = self.now()
+        ent = self.pending_suppressed.get(key)
+        if ent is None:
+            self.pending_suppressed[key] = [now, 1]
+        else:
+            ent[1] += 1
+        self._since_expire += 1
+        if self._since_expire >= 1024:
+            self._since_expire = 0
+            self._expire(now)
+
+    def on_access(self, key: Any, hit: bool) -> None:
+        """The stateful operator accessed ``key``: grade any pending
+        suppression.  A hit means the key really was resident (correct
+        suppression); a miss means the suppressed hint would have
+        prefetched it (incorrect).  An access arriving beyond the
+        horizon is unrelated to the suppression — graded unused."""
+        ent = self.pending_suppressed.pop(key, None)
+        if ent is None:
+            return
+        first_t, n = ent
+        if self.now() - first_t > self.suppress_horizon:
+            self.suppress_unused.inc(n)
+        elif hit:
+            self.suppress_resident.inc(n)
+        else:
+            self.suppress_miss.inc(n)
+
+    def _expire(self, now: float) -> None:
+        """Grade pending suppressions older than the horizon as unused
+        (the key was never accessed again — the hint would have been a
+        wasted staging)."""
+        horizon = self.suppress_horizon
+        stale = [k for k, (t, _n) in self.pending_suppressed.items()
+                 if now - t > horizon]
+        for k in stale:
+            self.suppress_unused.inc(self.pending_suppressed.pop(k)[1])
+
+    def flush_pending(self) -> None:
+        """End-of-run: grade everything still pending as unused so the
+        invariant closes (benchmarks call this before the final
+        snapshot; mid-run snapshots report ``suppress_pending``)."""
+        for k in list(self.pending_suppressed):
+            self.suppress_unused.inc(self.pending_suppressed.pop(k)[1])
+
     # ------------------------------------------------------------ rollup
     def quality_block(self, prefetch_hits: int, demand_fetches: int,
                       duplicates: int, late_wm: int) -> Dict[str, Any]:
@@ -98,6 +174,9 @@ class PrefetchRecorder:
         wasted = self.wasted.value
         late = self.late.value
         issued = staged + late
+        suppressed = self.suppressed.value
+        resolved = (self.suppress_resident.value + self.suppress_miss.value
+                    + self.suppress_unused.value)
         sk = self.lead.sketch
         out = {
             "staged": staged,
@@ -107,6 +186,11 @@ class PrefetchRecorder:
             "late_watermark": late_wm,
             "duplicate": duplicates,
             "resident_unused": max(0, staged - used - wasted),
+            "suppressed": suppressed,
+            "suppress_resident": self.suppress_resident.value,
+            "suppress_miss": self.suppress_miss.value,
+            "suppress_unused": self.suppress_unused.value,
+            "suppress_pending": suppressed - resolved,
             "precision": used / issued if issued else 0.0,
             "recall": prefetch_hits / (prefetch_hits + demand_fetches)
             if (prefetch_hits + demand_fetches) else 0.0,

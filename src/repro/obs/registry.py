@@ -327,6 +327,16 @@ METRIC_CATALOG: Dict[str, str] = {
     "engine.<op>.prefetch.lead":
         "hint lead time (s): first access minus stage-complete; <0 = late",
     "engine.<op>.prefetch.stage_latency": "staging I/O latency (s)",
+    # hint suppression plane (§13): HintFilter verdicts graded by the
+    # next access to the key at the stateful operator
+    "engine.<op>.prefetch.suppressed": "hints dropped by the HintFilter",
+    "engine.<op>.prefetch.suppress_resident":
+        "suppressions graded correct: next access hit cache in-horizon",
+    "engine.<op>.prefetch.suppress_miss":
+        "suppressions graded incorrect: next access missed in-horizon",
+    "engine.<op>.prefetch.suppress_unused":
+        "suppressions never followed by an in-horizon access (hint would "
+        "have been wasted)",
     # TAC eviction-reason breakdown, split by admission path
     "engine.<op>.evict.<reason>.<adm>":
         "evictions by reason (capacity|deadline|stale) and admission "

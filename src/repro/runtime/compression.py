@@ -1,36 +1,168 @@
-"""int8 gradient compression with error feedback (distributed-optimization
-trick for the 1000+ node posture).
+"""Wire compression: hint-key delta codec + int8 gradient compression.
 
-``make_compressor`` returns a grad_transform for ``make_train_step``: each
-tensor is quantised to int8 with a per-tensor scale before entering the
-optimizer; the quantisation error is carried into the next step (error
-feedback), which keeps SGD/Adam convergence intact (Karimireddy et al. 2019).
-On a real mesh the int8 payload is what crosses the wire — ``int8_allreduce``
-below is the shard_map collective that performs the reduction in int8 —
-while under GSPMD auto-parallelisation we apply the numerics transform and
-let XLA keep the reduction fused.
+Two independent planes share this module:
+
+* **Hint-channel delta codec** (DESIGN.md §13) — stdlib/numpy-free
+  encoding of a BATCH of integer state-access keys for the hint side
+  channel.  Keys in one flushed hint batch cluster tightly (NEXMark
+  auction ids are dense and monotone; window panes share the wid), so
+  sorting the batch and sending base + per-key deltas shrinks 8-byte
+  keys to ~1 byte each.  Format (little-endian):
+
+      [u32 count n] [u64 base] ([u8 delta] | [0xFF escape][u64 delta]) * (n-1)
+
+  Decoding returns the sorted key MULTISET (duplicates survive as zero
+  deltas); hint semantics are order-free, so sorting is lossless for the
+  prefetcher.  Composite keys (``WindowKey`` and other int tuples)
+  encode as one stream per tuple position.  ``hint_batch_nbytes`` is the
+  engine-facing entry point: it sizes a flushed hint batch for the
+  channel's byte accounting (``streaming/engine.py``) without the
+  engine importing jax.
+
+* **int8 gradient compression with error feedback** (the distributed-
+  optimization trick for the 1000+ node posture): ``make_compressor``
+  returns a grad_transform for ``make_train_step``; the quantisation
+  error carries into the next step, keeping SGD/Adam convergence intact
+  (Karimireddy et al. 2019).  ``int8_allreduce`` is the shard_map
+  collective twin.  jax imports are LAZY so the streaming engine can use
+  the codec above without pulling in the accelerator toolchain.
+
+``quantize_int8`` was written for float gradient tensors; its per-tensor
+float scale silently corrupts integer key deltas (``round(k/scale)*scale``
+is not ``k``).  Integer dtypes now take a lossless scale-1 path and raise
+when a value cannot be represented exactly in int8 — callers with wider
+integer payloads must delta-encode first (``delta_encode_keys``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Iterable, List, Tuple
 
-import jax
-import jax.numpy as jnp
+_U64_MAX = (1 << 64) - 1
+_ESCAPE = 0xFF
 
 
-def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+# --------------------------------------------------------- hint-key codec
+def delta_encode_keys(keys: Iterable[int]) -> bytes:
+    """Encode an integer key batch as sorted base + deltas (format above).
+
+    Input order is NOT preserved (hints are order-free); duplicates are.
+    Raises ``ValueError`` for negative keys or keys above 2**64 - 1 —
+    the caller falls back to fixed-width for such batches.
+    """
+    ks = sorted(int(k) for k in keys)
+    if ks and (ks[0] < 0 or ks[-1] > _U64_MAX):
+        raise ValueError(f"key out of u64 range: "
+                         f"[{ks[0]}, {ks[-1]}] not in [0, 2**64)")
+    out = bytearray(len(ks).to_bytes(4, "little"))
+    if not ks:
+        return bytes(out)
+    out += ks[0].to_bytes(8, "little")
+    prev = ks[0]
+    for k in ks[1:]:
+        d = k - prev
+        prev = k
+        if d < _ESCAPE:
+            out.append(d)
+        else:
+            out.append(_ESCAPE)
+            out += d.to_bytes(8, "little")
+    return bytes(out)
+
+
+def delta_decode_keys(buf: bytes) -> List[int]:
+    """Inverse of ``delta_encode_keys``: the sorted key multiset."""
+    n = int.from_bytes(buf[:4], "little")
+    if n == 0:
+        if len(buf) != 4:
+            raise ValueError("trailing bytes after empty batch")
+        return []
+    ks = [int.from_bytes(buf[4:12], "little")]
+    i = 12
+    for _ in range(n - 1):
+        d = buf[i]
+        i += 1
+        if d == _ESCAPE:
+            d = int.from_bytes(buf[i:i + 8], "little")
+            i += 8
+        ks.append(ks[-1] + d)
+    if i != len(buf):
+        raise ValueError(f"trailing bytes: consumed {i} of {len(buf)}")
+    return ks
+
+
+def hint_batch_nbytes(keys: Iterable[Any], ts_bytes: int = 4) -> int:
+    """Wire size of one flushed hint batch under the delta codec
+    (DESIGN.md §13).  Plain int keys form one delta stream; int tuples
+    (``WindowKey`` et al.) form one stream per position, grouped by
+    arity; anything else (string keys, negatives) falls back to 8 bytes.
+    Each hint additionally carries its access timestamp as float32
+    (``ts_bytes``) — timestamps do not cluster like keys, so they ship
+    uncompressed."""
+    ints: List[int] = []
+    tuple_streams: dict = {}        # arity -> list of position streams
+    fallback = 0
+    n = 0
+    for k in keys:
+        n += 1
+        if isinstance(k, bool):
+            fallback += 8
+        elif isinstance(k, int):
+            if 0 <= k <= _U64_MAX:
+                ints.append(k)
+            else:
+                fallback += 8
+        elif isinstance(k, tuple) and k and \
+                all(isinstance(p, int) and 0 <= p <= _U64_MAX for p in k):
+            streams = tuple_streams.setdefault(
+                len(k), [[] for _ in range(len(k))])
+            for i, p in enumerate(k):
+                streams[i].append(p)
+        else:
+            fallback += 8
+    total = fallback + ts_bytes * n
+    if ints:
+        total += len(delta_encode_keys(ints))
+    for streams in tuple_streams.values():
+        for stream in streams:
+            total += len(delta_encode_keys(stream))
+    return total
+
+
+# ---------------------------------------------------- int8 grad compression
+def quantize_int8(x) -> Tuple[Any, Any]:
+    """Quantise to int8 with a per-tensor scale.
+
+    Float tensors keep the gradient-compression semantics (lossy, max-abs
+    scale).  INTEGER tensors take a lossless scale-1 path — a float scale
+    would corrupt key deltas — and raise when any value falls outside
+    [-127, 127] (callers escape to ``delta_encode_keys``)."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        import numpy as np
+        xn = np.asarray(x)
+        if xn.size and int(np.abs(xn.astype(np.int64)).max()) > 127:
+            raise ValueError(
+                "integer payload exceeds int8 range; int8 quantisation "
+                "would be lossy — delta-encode keys first "
+                "(delta_encode_keys)")
+        return (jnp.asarray(xn.astype(np.int8)),
+                jnp.asarray(1.0, dtype=jnp.float32))
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+def dequantize_int8(q, scale):
+    import jax.numpy as jnp
     return q.astype(jnp.float32) * scale
 
 
 def make_compressor() -> Tuple[Callable, Callable]:
     """Returns (init_error_state, grad_transform(grads, err) ->
     (grads', err'))."""
+    import jax
+    import jax.numpy as jnp
 
     def init(params):
         return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
@@ -51,9 +183,11 @@ def make_compressor() -> Tuple[Callable, Callable]:
     return init, transform
 
 
-def int8_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+def int8_allreduce(x, axis_name: str):
     """shard_map-style collective: quantise locally, all-reduce the int8
     payload (summed in int32), dequantise with the max scale."""
+    import jax
+    import jax.numpy as jnp
     q, scale = quantize_int8(x)
     scale = jax.lax.pmax(scale, axis_name)
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)

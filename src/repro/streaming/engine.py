@@ -15,13 +15,14 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.cms import CountMinFilter
+from repro.core.hint_filter import HintFilter
 from repro.core.policies import ClockCache, LRUCache
 from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
                                  PrefetchingManager)
 from repro.core.tac import TimestampAwareCache
 from repro.obs import (MetricsRegistry, PrefetchRecorder, QuantileSketch,
                        Tracer)
+from repro.runtime.compression import hint_batch_nbytes
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
                                     Tuple_, Watermark)
@@ -93,18 +94,26 @@ class Channel:
 
     def __init__(self, sim: Sim, dst_op: "Operator", kind: str,
                  partition: Callable[[Any, int], int],
-                 n_src: int, timeout: float = BUFFER_TIMEOUT):
+                 n_src: int, timeout: float = BUFFER_TIMEOUT,
+                 codec: Optional[str] = None):
         self.sim = sim
         self.chan_id = next(Channel._ids)
         self.dst = dst_op
         self.kind = kind                  # data | hint
         self.partition = partition
         self.timeout = timeout
+        # "delta" = per-flush delta compression of sorted key batches
+        # (runtime/compression.py, DESIGN.md §13).  Affects byte
+        # ACCOUNTING only: flush thresholds and the delay model keep
+        # operating on raw sizes, so enabling the codec never perturbs
+        # latency semantics — bytes_sent vs bytes_raw shows the saving.
+        self.codec = codec
         self.bufs: Dict[Tuple[int, int], List] = defaultdict(list)
         self.buf_bytes: Dict[Tuple[int, int], int] = defaultdict(int)
         self.flush_scheduled: Dict[Tuple[int, int], bool] = defaultdict(bool)
         self.last_arrival: Dict[Tuple[int, int], float] = defaultdict(float)
         self.bytes_sent = 0
+        self.bytes_raw = 0
         self.msgs_sent = 0
 
     def send(self, src_sub: int, msg: Any) -> None:
@@ -159,7 +168,9 @@ class Channel:
         self.bufs[(s, d)] = []
         nbytes = self.buf_bytes[(s, d)]
         self.buf_bytes[(s, d)] = 0
-        self.bytes_sent += nbytes + 8 * len(batch)
+        raw = nbytes + 8 * len(batch)
+        self.bytes_raw += raw
+        self.bytes_sent += self._wire_bytes(batch, raw)
         self.msgs_sent += len(batch)
         delay = NET_LATENCY + NET_PER_MSG * len(batch)
         # the per-message term makes a small batch faster than a LARGE
@@ -171,6 +182,20 @@ class Channel:
         self.last_arrival[(s, d)] = arrive
         self.sim.at(arrive, self.dst.deliver_batch, d, batch,
                     (self.chan_id, s))
+
+    def _wire_bytes(self, batch: List, raw: int) -> int:
+        """Bytes this flush puts on the wire.  With the delta codec, the
+        batch's hint keys ship as sorted delta streams plus an f32
+        access timestamp each (``hint_batch_nbytes``); control messages
+        and anything else keep their raw size."""
+        if self.codec is None:
+            return raw
+        hint_keys = [m.key for m in batch if isinstance(m, Hint)]
+        if not hint_keys:
+            return raw
+        other = sum(getattr(m, "size", 64) + 8 for m in batch
+                    if not isinstance(m, Hint))
+        return hint_batch_nbytes(hint_keys) + other
 
 
 # hash_partition lives in repro.streaming.shards (one canonical definition
@@ -219,6 +244,11 @@ class Operator:
         self._wm_in: List[Dict[Any, float]] = \
             [dict() for _ in range(parallelism)]
         self.wm_expected = 0
+
+    def extra_metrics(self) -> Dict[str, Any]:
+        """Operator-specific counters surfaced by ``Engine.metrics``
+        under ``{name}_{key}``; subclasses extend via ``super()``."""
+        return {}
 
     # ------------------------------------------------------------- plumbing
     def deliver_batch(self, sub: int, batch: List[Any],
@@ -411,15 +441,45 @@ class MapOp(Operator):
 
     def __init__(self, engine, name, parallelism, fn=None,
                  service_time=2e-6, key_of: Optional[Callable] = None,
-                 cms_conf: Optional[dict] = None):
+                 cms_conf: Optional[dict] = None,
+                 filter_conf: Optional[dict] = None):
         super().__init__(engine, name, parallelism, service_time)
         self.fn = fn
         self.key_of = key_of               # state-access key extractor
         self.hint_active = False
-        self.cms = [CountMinFilter(**(cms_conf or {}))
-                    for _ in range(parallelism)] if key_of else None
+        if key_of is not None:
+            # hint admission (DESIGN.md §13); cms_conf stays a separate
+            # kwarg for existing callers and folds into the filter
+            conf = dict(filter_conf or {})
+            conf.setdefault("cms_conf", cms_conf)
+            self.filters: Optional[List[HintFilter]] = [
+                HintFilter(**conf) for _ in range(parallelism)]
+        else:
+            self.filters = None
+        # bound by Engine.register_prefetching: the downstream stateful
+        # operator's PrefetchRecorder, so suppression verdicts can be
+        # graded against what the cache actually did next (§13)
+        self.sink_recorder = None
         self.hints_emitted = 0
         self.hints_suppressed = 0
+        self.speculative_hints = 0
+
+    @property
+    def cms(self):
+        """Per-subtask CMS sketches (compat view over the filters)."""
+        return [f.cms for f in self.filters] if self.filters else None
+
+    def _admit(self, sub: int, key, freq_key=None) -> bool:
+        """Run one hint through the subtask's HintFilter; True = emit.
+        Suppressions report to the sink recorder for retroactive
+        grading."""
+        if self.filters[sub].admit(key, self.sim.t, freq_key):
+            self.hints_emitted += 1
+            return True
+        self.hints_suppressed += 1
+        if self.sink_recorder is not None:
+            self.sink_recorder.on_suppressed(key)
+        return False
 
     def on_marker(self, sub: int, m: Marker) -> None:
         # side-channel copy first: the hint path must never trail the data
@@ -431,11 +491,12 @@ class MapOp(Operator):
 
     def reset_volatile(self) -> None:
         super().reset_volatile()
-        if self.cms is not None:
-            # CMS frequency counters are process-local soft state: a crash
-            # loses them and suppression re-learns (DESIGN.md §7)
-            for c in self.cms:
-                c.reset()
+        if self.filters is not None:
+            # filter state (CMS counters, residency map, budget) is
+            # process-local soft state: a crash loses it and admission
+            # re-learns (DESIGN.md §7)
+            for f in self.filters:
+                f.reset()
 
     def _emit_hints_for(self, sub: int, o: Tuple_) -> float:
         """Hint Extractor for one output tuple; returns the extraction
@@ -444,13 +505,21 @@ class MapOp(Operator):
         k = self.key_of(o)
         if k is None:
             return 0.0
-        if self.cms[sub].update_and_classify(k):
-            self.hints_suppressed += 1
-        else:
-            self.hints_emitted += 1
+        if self._admit(sub, k):
             self.emit_hint(sub, Hint(k, o.ts, origin=self.name,
                                      emit_t=self.sim.t))
         return HINT_COST
+
+    def extra_metrics(self) -> Dict[str, Any]:
+        out = super().extra_metrics()
+        if self.filters:
+            agg: Dict[str, int] = {}
+            for f in self.filters:
+                for k, v in f.counters.items():
+                    agg[k] = agg.get(k, 0) + v
+            out["hint_filter"] = {"mode": self.filters[0].mode, **agg}
+            out["speculative_hints"] = self.speculative_hints
+        return out
 
     def process(self, sub: int, tup: Tuple_) -> Optional[float]:
         out = self.fn(tup) if self.fn else tup
@@ -894,6 +963,10 @@ class StatefulOp(Operator):
         if state is not None:
             if tr is not None and tr.hit is None:
                 tr.hit = True
+            if self.recorder.pending_suppressed:
+                # grade a pending hint suppression for this key: the key
+                # was resident, so the suppression was correct (§13)
+                self.recorder.on_access(tup.key, hit=True)
             if self.mode == "prefetch":
                 self.managers[sub].prefetch_hits += 1
                 if self.shards is not None:
@@ -906,11 +979,17 @@ class StatefulOp(Operator):
             # fetch would read STALE data — serve from the memtable
             if tr is not None and tr.hit is None:
                 tr.hit = True
+            if self.recorder.pending_suppressed:
+                self.recorder.on_access(tup.key, hit=True)
             cache.insert(tup.key, wb.state, tup.ts, size=self.state_size)
             return self._apply(sub, tup, wb.state)
         # miss
         if tr is not None and tr.hit is None:
             tr.hit = False
+        if self.recorder.pending_suppressed:
+            # the suppressed hint would have prefetched this key:
+            # incorrect suppression (it costs a demand fetch)
+            self.recorder.on_access(tup.key, hit=False)
         if self.mode == "prefetch" and not self.managers[sub].enabled:
             la = self.managers[sub].on_cache_misses(self.sim.t)
             if la is not None:
@@ -1313,9 +1392,10 @@ class Engine:
 
     def connect(self, src: Operator, dst: Operator,
                 partition=hash_partition, kind: str = "data",
-                timeout: float = BUFFER_TIMEOUT) -> None:
+                timeout: float = BUFFER_TIMEOUT,
+                codec: Optional[str] = None) -> None:
         ch = Channel(self.sim, dst, kind, partition, src.parallelism,
-                     timeout)
+                     timeout, codec=codec)
         if kind == "hint":
             src.out_hint.append(ch)
         else:
@@ -1327,11 +1407,15 @@ class Engine:
             dst.barrier_expected += src.parallelism
 
     def register_prefetching(self, stateful: StatefulOp,
-                             lookaheads: List[MapOp]) -> None:
+                             lookaheads: List[MapOp],
+                             compress_hints: bool = False) -> None:
         """Declare candidate lookaheads (ordered source -> closest) and wire
         the hint side channels.  On the sharded plane the hint channels
         partition by shard OWNERSHIP (DESIGN.md §9): each hint reaches
-        exactly the subtask whose prefetcher owns the key."""
+        exactly the subtask whose prefetcher owns the key.  With
+        ``compress_hints`` the channels account bytes under the delta
+        codec (§13).  Binding also points each lookahead's suppression
+        verdicts at the stateful operator's recorder for grading."""
         cands = [LookaheadCandidate(op.name, op.plan_pos)
                  for op in lookaheads]
         self.controller.register(stateful.name, cands)
@@ -1340,8 +1424,10 @@ class Engine:
         hint_partition = plane.route_hint if plane is not None \
             else hash_partition
         for op in lookaheads:
+            op.sink_recorder = stateful.recorder
             self.connect(op, stateful, partition=hint_partition,
-                         kind="hint", timeout=HINT_TIMEOUT)
+                         kind="hint", timeout=HINT_TIMEOUT,
+                         codec="delta" if compress_hints else None)
 
     def migrate_shard(self, op_name: str, shard: int, dst_sub: int,
                       at: Optional[float] = None) -> None:
@@ -1478,6 +1564,11 @@ class Engine:
             self._sink_count.value = 0
             self.tracer.reset()
         self.sim.run_until(warmup + duration)
+        for op in self.operators.values():
+            if isinstance(op, StatefulOp):
+                # close the suppression ledger (§13): anything still
+                # pending at end of run was never accessed again
+                op.recorder.flush_pending()
         return self.metrics(duration, warmup)
 
     # -------------------------------------------------------------- metrics
@@ -1503,15 +1594,21 @@ class Engine:
         for name, op in self.operators.items():
             out[f"util_{name}"] = (sum(op.busy_time)
                                    / (op.parallelism * (duration + warmup)))
-        data_bytes = hint_bytes = 0
+        data_bytes = hint_bytes = hint_bytes_raw = 0
+        codecs_active = False
         for op in self.operators.values():
             for ch in op.out_data:
                 data_bytes += ch.bytes_sent
             for ch in op.out_hint:
                 hint_bytes += ch.bytes_sent
+                hint_bytes_raw += ch.bytes_raw
+                codecs_active = codecs_active or ch.codec is not None
         out["data_bytes"] = data_bytes
         out["hint_bytes"] = hint_bytes
         out["net_overhead"] = hint_bytes / max(1, data_bytes)
+        if codecs_active:
+            out["hint_bytes_raw"] = hint_bytes_raw
+            out["hint_compression"] = hint_bytes_raw / max(1, hint_bytes)
         for name, op in self.operators.items():
             if isinstance(op, StatefulOp):
                 out[f"{name}_hit_rate"] = sum(

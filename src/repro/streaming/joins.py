@@ -379,7 +379,8 @@ class JoinLookaheadOp(WindowedLookaheadOp):
                  burst_ahead: float = 0.0, allowed_lateness: float = 0.0,
                  probe_ahead: float = 0.0,
                  service_time: float = 10e-6,
-                 cms_conf: Optional[dict] = None):
+                 cms_conf: Optional[dict] = None,
+                 filter_conf: Optional[dict] = None):
         if (assigner is None) == (bounds is None):
             raise ValueError("exactly one of assigner (windowed) or "
                              "bounds (interval) must be set")
@@ -395,13 +396,19 @@ class JoinLookaheadOp(WindowedLookaheadOp):
                          fn=fn, hint_ts_mode=hint_ts_mode,
                          burst_ahead=burst_ahead,
                          allowed_lateness=allowed_lateness,
-                         service_time=service_time, cms_conf=cms_conf)
+                         service_time=service_time, cms_conf=cms_conf,
+                         filter_conf=filter_conf)
         self.side_of = side_of
         self.hint_sides = tuple(hint_sides)
         self.bounds = bounds
         self.probe_ahead = float(probe_ahead)
         self.side_hints = {LEFT: 0, RIGHT: 0}
         self.side_suppressed = 0
+        # per-subtask max integer join key seen (interval speculation):
+        # entity ids in stream workloads grow monotonically (NEXMark
+        # auction ids), so keys just ABOVE the frontier are the ones a
+        # tuple has not named yet but is about to (DESIGN.md §13)
+        self._spec_frontier = [-1] * parallelism
 
     def _emit_hints_for(self, sub: int, o: Tuple_) -> float:
         key = self.key_of(o)
@@ -422,13 +429,31 @@ class JoinLookaheadOp(WindowedLookaheadOp):
             ts = max(o.ts, min(d, o.ts + self.probe_ahead))
         else:
             ts = o.ts
-        if self.cms[sub].update_and_classify(key):
-            self.hints_suppressed += 1
-        else:
-            self.hints_emitted += 1
+        if self._admit(sub, key):
             self.side_hints[side] += 1
             self.emit_hint(sub, Hint(key, ts, origin=self.name))
+        filt = self.filters[sub]
+        if filt.speculative and isinstance(key, int) \
+                and key > self._spec_frontier[sub]:
+            # frontier speculation (class docstring frontier note, §13):
+            # hint the next spec_width ids above the new frontier BEFORE
+            # any tuple names them — their first probe lands soon after
+            # this one's.  note_emit marks them resident so their
+            # data-driven hints collapse into correct duplicates.  Fires
+            # once per frontier advance, so the volume is bounded by the
+            # distinct-key arrival rate, not the tuple rate.
+            lo_k = max(key, self._spec_frontier[sub]) + 1
+            self._spec_frontier[sub] = key + filt.spec_width
+            spec_ts = o.ts + self.probe_ahead
+            for nk in range(lo_k, key + filt.spec_width + 1):
+                self.speculative_hints += 1
+                filt.note_emit(nk, self.sim.t)
+                self.emit_hint(sub, Hint(nk, spec_ts, origin=self.name))
         return HINT_COST
+
+    def reset_volatile(self) -> None:
+        super().reset_volatile()
+        self._spec_frontier = [-1] * self.parallelism
 
     def extra_metrics(self) -> Dict[str, Any]:
         out = super().extra_metrics()

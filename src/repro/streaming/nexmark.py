@@ -54,10 +54,21 @@ class NexmarkConfig:
     oo_bound: float = 0.0
     late_prob: float = 0.02
     watermark_interval: float = 0.05
+    # auction-id distribution over the active range (hint-quality
+    # ablations, DESIGN.md §13): "nexmark" = the paper's hot-auction
+    # process above; "uniform" = no skew; "zipf" = Zipf(~1) rank over the
+    # active range (zipf_s > 1 sharpens the skew); "shift" = zipf whose
+    # rank->id mapping ROTATES every shift_interval seconds — the
+    # adversarial case where yesterday's hot set goes cold at once
+    key_dist: str = "nexmark"
+    zipf_s: float = 1.0
+    shift_interval: float = 5.0
 
     def __post_init__(self):
         if self.auctions_per_s is None:
             self.auctions_per_s = 0.06 * self.rate
+        if self.key_dist not in ("nexmark", "uniform", "zipf", "shift"):
+            raise ValueError(f"key_dist {self.key_dist!r}")
 
 
 class NexmarkGen:
@@ -72,7 +83,10 @@ class NexmarkGen:
         self.rng = random.Random(cfg.seed)
         self.n = 0
         self.recent_pairs = []
-        self.repeat_pair_prob = 0.4
+        # bid wars belong to the default workload; the synthetic
+        # distributions keep a small repeat fraction so the dedup paths
+        # stay exercised without masking the distribution's own shape
+        self.repeat_pair_prob = 0.4 if cfg.key_dist == "nexmark" else 0.1
 
     def active_range(self, now: float, per_s: float) -> Tuple[int, int]:
         hi = max(1, int(now * per_s))
@@ -81,10 +95,28 @@ class NexmarkGen:
 
     def _auction_id(self, now: float) -> int:
         lo, hi = self.active_range(now, self.cfg.auctions_per_s)
-        if self.rng.random() < self.cfg.hot_auction_prob:
-            # the most popular auction changes once per second (paper §VI-d)
-            return min(hi - 1, int(int(now) * self.cfg.auctions_per_s))
-        return self.rng.randint(lo, max(lo, hi - 1))
+        dist = self.cfg.key_dist
+        if dist == "nexmark":
+            if self.rng.random() < self.cfg.hot_auction_prob:
+                # most popular auction changes once per second (paper §VI-d)
+                return min(hi - 1, int(int(now) * self.cfg.auctions_per_s))
+            return self.rng.randint(lo, max(lo, hi - 1))
+        if dist == "uniform":
+            return self.rng.randint(lo, max(lo, hi - 1))
+        # zipf / shift: rank ~ Zipf(1) over the active range via the
+        # log-uniform trick (rank = n**u - 1 puts prob ~1/(rank+1) mass
+        # on each rank); zipf_s > 1 sharpens the head
+        n = max(1, hi - lo)
+        u = self.rng.random() ** self.cfg.zipf_s
+        rank = min(n - 1, int(n ** u) - 1)
+        if dist == "shift":
+            # rotate the rank->id mapping each epoch: rank 0 (the hottest
+            # id) jumps to a fresh region of the keyspace, so the learned
+            # hot set goes cold INSTANTLY at the epoch boundary
+            epoch = int(now / self.cfg.shift_interval)
+            step = max(1, n // 7)
+            rank = (rank + epoch * step) % n
+        return lo + rank
 
     def _bidder_id(self, now: float) -> int:
         per_s = max(0.02 * self.cfg.rate, 1.0)
@@ -162,7 +194,9 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 allowed_lateness: Optional[float] = None,
                 join_hints: str = "two",
                 join_horizon: Optional[float] = None,
-                replayable: bool = False) -> Engine:
+                replayable: bool = False,
+                hint_filter: Optional[dict] = None,
+                compress_hints: bool = False) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -190,19 +224,25 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     ``replayable=True`` puts a durable log in front of the source
     (DESIGN.md §7): the generator runs on a logical clock and records are
     replayable from a checkpointed offset — required for the failure/
-    recovery scenarios (``streaming/recovery.py``)."""
+    recovery scenarios (``streaming/recovery.py``).
+
+    ``hint_filter`` is a HintFilter config dict applied to every
+    lookahead (DESIGN.md §13; e.g. ``{"mode": "selective",
+    "speculative": True}``); ``compress_hints`` accounts hint-channel
+    bytes under the delta codec."""
     if query in ("q5", "q7"):
         return _build_windowed_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, window_slide,
-            allowed_lateness, replayable)
+            allowed_lateness, replayable, hint_filter, compress_hints)
     if query == "q8" or (query == "q20" and cfg.oo_bound > 0):
         return _build_join_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, allowed_lateness,
-            join_hints, join_horizon, replayable)
+            join_hints, join_horizon, replayable, hint_filter,
+            compress_hints)
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
 
@@ -341,10 +381,10 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                            gen_filtered, replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=type_filter,
                           service_time=15e-6, key_of=key_of,
-                          cms_conf=cms_conf))
+                          cms_conf=cms_conf, filter_conf=hint_filter))
     norm = eng.add(MapOp(eng, "normalize", parallelism, fn=rekey,
                          service_time=10e-6, key_of=key_of,
-                         cms_conf=cms_conf))
+                         cms_conf=cms_conf, filter_conf=hint_filter))
     plane = None
     if n_shards is not None:
         from repro.streaming.shards import ShardPlane
@@ -371,7 +411,8 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 timeout=to)
     eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
-        eng.register_prefetching(stateful, [parse, norm])
+        eng.register_prefetching(stateful, [parse, norm],
+                                 compress_hints=compress_hints)
     return eng
 
 
@@ -379,7 +420,8 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
                           parallelism, source_parallelism, io_workers,
                           cms_conf, n_shards, buffer_timeout, hint_ts,
                           window_size, window_slide, allowed_lateness,
-                          replayable=False):
+                          replayable=False, hint_filter=None,
+                          compress_hints=False):
     """Event-time windowed NEXMark queries (DESIGN.md §10).
 
     q5 (hot items, simplified): bid count per auction per SLIDING window,
@@ -447,7 +489,8 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
     winla = eng.add(WindowedLookaheadOp(
         eng, "win_lookahead", parallelism, assigner, key_of, fn=rekey,
         hint_ts_mode=hint_ts, burst_ahead=2 * cfg.watermark_interval,
-        allowed_lateness=lateness, service_time=10e-6, cms_conf=cms_conf))
+        allowed_lateness=lateness, service_time=10e-6, cms_conf=cms_conf,
+        filter_conf=hint_filter))
     plane = None
     if n_shards is not None:
         from repro.streaming.shards import ShardPlane
@@ -478,7 +521,8 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
                 timeout=to)
     eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
-        eng.register_prefetching(stateful, [winla])
+        eng.register_prefetching(stateful, [winla],
+                                 compress_hints=compress_hints)
     return eng
 
 
@@ -486,7 +530,8 @@ def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
                       parallelism, source_parallelism, io_workers,
                       cms_conf, n_shards, buffer_timeout, hint_ts,
                       window_size, allowed_lateness, join_hints,
-                      join_horizon, replayable=False):
+                      join_horizon, replayable=False, hint_filter=None,
+                      compress_hints=False):
     """Stream-stream join queries with two-sided keyed prefetching
     (DESIGN.md §11).
 
@@ -593,7 +638,7 @@ def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
                           service_time=15e-6))
     la_kw = dict(fn=rekey, hint_sides=hint_sides, hint_ts_mode=hint_ts,
                  allowed_lateness=lateness, service_time=10e-6,
-                 cms_conf=cms_conf)
+                 cms_conf=cms_conf, filter_conf=hint_filter)
     if query == "q8":
         lookahead = eng.add(JoinLookaheadOp(
             eng, "join_lookahead", parallelism, side_of, key_of,
@@ -644,5 +689,6 @@ def _build_join_query(query, policy, mode, cfg, cache_entries, backend,
                 timeout=to)
     eng.connect(join, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
-        eng.register_prefetching(join, [lookahead])
+        eng.register_prefetching(join, [lookahead],
+                                 compress_hints=compress_hints)
     return eng

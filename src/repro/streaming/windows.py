@@ -402,12 +402,13 @@ class WindowedLookaheadOp(MapOp):
     def __init__(self, engine, name, parallelism, assigner: WindowAssigner,
                  key_of: Callable, fn=None, hint_ts_mode: str = "deadline",
                  burst_ahead: float = 0.0, allowed_lateness: float = 0.0,
-                 service_time: float = 10e-6, cms_conf: Optional[dict] = None):
+                 service_time: float = 10e-6, cms_conf: Optional[dict] = None,
+                 filter_conf: Optional[dict] = None):
         if hint_ts_mode not in ("deadline", "arrival"):
             raise ValueError(f"hint_ts_mode {hint_ts_mode!r}")
         super().__init__(engine, name, parallelism, fn=fn,
                          service_time=service_time, key_of=key_of,
-                         cms_conf=cms_conf)
+                         cms_conf=cms_conf, filter_conf=filter_conf)
         self.assigner = assigner
         self.hint_ts_mode = hint_ts_mode
         self.burst_ahead = burst_ahead
@@ -436,10 +437,11 @@ class WindowedLookaheadOp(MapOp):
                 continue                   # late: dropped downstream anyway
             wk = WindowKey(base, wid)
             svc += HINT_COST
-            if self.cms[sub].update_and_classify(wk):
-                self.hints_suppressed += 1
-            else:
-                self.hints_emitted += 1
+            # the pane key is hinted; the BASE key carries the frequency
+            # (stable across panes — a pane key is new every window, so
+            # counting it would never see a selective filter's cold/hot
+            # signal).  "hot" mode ignores freq_key (legacy semantics).
+            if self._admit(sub, wk, freq_key=base):
                 self.emit_hint(sub, Hint(wk, end if deadline else ts,
                                          origin=self.name))
             if deadline:
@@ -459,10 +461,27 @@ class WindowedLookaheadOp(MapOp):
             elif end <= horizon and wid not in self._burst_done[sub] \
                     and self.hint_active:
                 self._burst_done[sub].add(wid)
+                filt = self.filters[sub]
+                nxt = wid + 1
+                nxt_end = self.assigner.end(nxt)
                 for base in self.win_keys[sub][wid]:
                     self.burst_hints += 1
                     self.emit_hint(sub, Hint(WindowKey(base, wid), end,
                                              origin=self.name))
+                    # speculative next-pane pre-hint (DESIGN.md §13): a
+                    # base hot in THIS window is likely live in the next
+                    # one — hint its next pane now, at watermark advance,
+                    # before any of its tuples arrive.  note_emit marks
+                    # it resident so the data-driven hint that follows is
+                    # suppressed as a correct duplicate.  The pane is NOT
+                    # added to win_keys: if no tuple ever materialises
+                    # it, there is nothing to burst later.
+                    if filt.speculate_ok(base):
+                        self.speculative_hints += 1
+                        wk_next = WindowKey(base, nxt)
+                        filt.note_emit(wk_next, self.sim.t)
+                        self.emit_hint(sub, Hint(wk_next, nxt_end,
+                                                 origin=self.name))
 
     def reset_volatile(self) -> None:
         # live-key tracking and burst bookkeeping are process-local soft
@@ -472,5 +491,7 @@ class WindowedLookaheadOp(MapOp):
         self._burst_done = [set() for _ in range(self.parallelism)]
 
     def extra_metrics(self) -> Dict[str, Any]:
-        return {"burst_hints": self.burst_hints,
-                "tracked_windows": sum(len(w) for w in self.win_keys)}
+        out = super().extra_metrics()
+        out.update({"burst_hints": self.burst_hints,
+                    "tracked_windows": sum(len(w) for w in self.win_keys)})
+        return out

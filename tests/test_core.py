@@ -158,6 +158,72 @@ def test_cms_never_underestimates(keys):
         assert cms.estimate(k) >= min(c, 255)
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=50, max_size=500))
+def test_cms_update_estimate_never_underestimates(keys):
+    """``update()`` property: the returned running estimate is >= the
+    true count so far (saturating at the counter max)."""
+    cms = CountMinFilter(depth=4, width=512, bits=8, threshold=10 ** 9,
+                         aging_interval=10 ** 9)
+    true = {}
+    for k in keys:
+        true[k] = true.get(k, 0) + 1
+        est, _hot = cms.update(k)
+        assert est >= min(true[k], 255)
+        assert est == cms.estimate(k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=20, max_size=300))
+def test_cms_update_matches_legacy_classify(keys):
+    """``update()`` and ``update_and_classify()`` fed the same stream
+    agree on every hot verdict and leave identical counter state
+    (including aging), so the HintFilter's estimate path cannot drift
+    from the legacy hot/cold path."""
+    a = CountMinFilter(depth=3, width=256, bits=8, threshold=5,
+                       aging_interval=64)
+    b = CountMinFilter(depth=3, width=256, bits=8, threshold=5,
+                       aging_interval=64)
+    for k in keys:
+        est, hot = a.update(k)
+        assert hot == b.update_and_classify(k)
+        assert hot == (est >= a.threshold)
+    assert (a.counters == b.counters).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 32), st.integers(1, 60))
+def test_cms_classify_monotone_across_threshold(key, n):
+    """With aging off, repeated updates of a single key cross the hot
+    threshold exactly once and never fall back (verdict sequence is
+    monotone False* True*)."""
+    cms = CountMinFilter(depth=4, width=128, threshold=20,
+                         aging_interval=10 ** 9)
+    verdicts = [cms.update_and_classify(key) for _ in range(n)]
+    assert verdicts == sorted(verdicts)
+    if n >= cms.threshold:
+        assert all(verdicts[cms.threshold - 1:])
+        assert not any(verdicts[:cms.threshold - 1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=200))
+def test_cms_reset_forgets_everything(keys):
+    """``reset()`` zeroes every estimate and hot verdict, and the
+    cached flat view still aliases the counters afterwards (the next
+    update is visible)."""
+    cms = CountMinFilter(depth=4, width=256, threshold=3,
+                         aging_interval=10 ** 9)
+    for k in keys:
+        cms.update(k)
+    cms.reset()
+    for k in keys:
+        assert cms.estimate(k) == 0
+        assert not cms.is_hot(k)
+    est, _ = cms.update(keys[0])
+    assert est == 1 == cms.estimate(keys[0])
+
+
 # --------------------------------------------------------------------- hints
 def test_hints_buffer_dedup_and_ts_merge():
     hb = HintsBuffer()

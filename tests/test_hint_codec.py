@@ -1,0 +1,129 @@
+"""Hint-channel delta codec tests (DESIGN.md §13): roundtrip over the
+sorted key multiset, wire-format edges, batch sizing for composite keys,
+and the int8 quantiser's integer-safety guard."""
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.runtime.compression import (delta_decode_keys, delta_encode_keys,
+                                       hint_batch_nbytes)
+
+U64_MAX = (1 << 64) - 1
+
+
+# ---------------------------------------------------------------- roundtrip
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, U64_MAX), max_size=200))
+def test_roundtrip_is_sorted_multiset(keys):
+    """decode(encode(keys)) == sorted(keys) — duplicates survive as zero
+    deltas, order does not (hints are order-free)."""
+    assert delta_decode_keys(delta_encode_keys(keys)) == sorted(keys)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 10 ** 6), min_size=2, max_size=200))
+def test_dense_batches_approach_one_byte_per_key(keys):
+    """Keys within a 254-wide span encode as base + 1 byte each."""
+    lo = min(keys)
+    if max(keys) - lo >= 0xFF:
+        keys = [lo + (k - lo) % 0xFF for k in keys]
+    assert len(delta_encode_keys(keys)) == 4 + 8 + (len(keys) - 1)
+
+
+def test_empty_batch():
+    buf = delta_encode_keys([])
+    assert buf == b"\x00\x00\x00\x00"
+    assert delta_decode_keys(buf) == []
+
+
+def test_single_key():
+    buf = delta_encode_keys([12345])
+    assert len(buf) == 12
+    assert delta_decode_keys(buf) == [12345]
+
+
+def test_duplicates_survive():
+    assert delta_decode_keys(delta_encode_keys([5, 5, 5, 1])) == [1, 5, 5, 5]
+
+
+def test_non_monotonic_input_is_sorted():
+    assert delta_decode_keys(delta_encode_keys([9, 2, 7, 2])) == [2, 2, 7, 9]
+
+
+def test_wide_gaps_take_escape_path():
+    keys = [0, 1, U64_MAX]                   # last delta needs the escape
+    buf = delta_encode_keys(keys)
+    assert len(buf) == 4 + 8 + 1 + (1 + 8)
+    assert delta_decode_keys(buf) == keys
+
+
+def test_u64_bounds():
+    assert delta_decode_keys(delta_encode_keys([U64_MAX])) == [U64_MAX]
+    with pytest.raises(ValueError):
+        delta_encode_keys([U64_MAX + 1])
+    with pytest.raises(ValueError):
+        delta_encode_keys([-1])
+
+
+def test_decode_rejects_trailing_bytes():
+    with pytest.raises(ValueError):
+        delta_decode_keys(delta_encode_keys([1, 2]) + b"\x00")
+    with pytest.raises(ValueError):
+        delta_decode_keys(b"\x00\x00\x00\x00junk")
+
+
+# ------------------------------------------------------------- batch sizing
+def test_nbytes_int_batch():
+    keys = [100, 101, 103, 103]
+    # one delta stream (4+8+3) + one f32 timestamp per hint
+    assert hint_batch_nbytes(keys) == 15 + 4 * len(keys)
+
+
+def test_nbytes_tuple_streams_grouped_by_arity():
+    keys = [(10, 1), (11, 1), (12, 1)]       # WindowKey-shaped
+    # two position streams of 3 keys each: 2*(4+8+2), plus timestamps
+    assert hint_batch_nbytes(keys) == 2 * 14 + 4 * 3
+    mixed = [(1, 2), (3, 4, 5)]              # different arities don't mix
+    assert hint_batch_nbytes(mixed) == (2 * 12) + (3 * 12) + 4 * 2
+
+
+def test_nbytes_fallback_for_unencodable_keys():
+    # strings, bools, negatives and overwide ints ship fixed-width
+    assert hint_batch_nbytes(["abc"]) == 8 + 4
+    assert hint_batch_nbytes([True]) == 8 + 4
+    assert hint_batch_nbytes([-5]) == 8 + 4
+    assert hint_batch_nbytes([U64_MAX + 1]) == 8 + 4
+    assert hint_batch_nbytes([("a", 1)]) == 8 + 4
+
+
+def test_nbytes_beats_fixed_width_on_clustered_batch():
+    keys = list(range(5000, 5200))
+    assert hint_batch_nbytes(keys) < len(keys) * 8
+
+
+# ------------------------------------------------------- int8 integer path
+def test_quantize_int8_integer_payload_is_lossless():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.runtime.compression import dequantize_int8, quantize_int8
+    x = jnp.asarray([0, 1, -127, 127, 64], dtype=jnp.int32)
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert float(scale) == 1.0
+    assert (dequantize_int8(q, scale) == x.astype(jnp.float32)).all()
+
+
+def test_quantize_int8_rejects_overwide_integers():
+    pytest.importorskip("jax.numpy")
+    import jax.numpy as jnp
+    from repro.runtime.compression import quantize_int8
+    with pytest.raises(ValueError):
+        quantize_int8(jnp.asarray([128], dtype=jnp.int32))
+
+
+def test_quantize_int8_float_path_still_lossy_roundtrip():
+    pytest.importorskip("jax.numpy")
+    import jax.numpy as jnp
+    from repro.runtime.compression import dequantize_int8, quantize_int8
+    x = jnp.linspace(-3.0, 3.0, 64)
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6

@@ -1,0 +1,191 @@
+"""HintFilter admission tests (DESIGN.md §13): mode semantics, the
+residency/cold/budget decision layers, bit-parity of ``hot`` mode with
+the legacy inline CMS rule, the speculation gate, and the Pallas device
+twin."""
+import random
+
+import pytest
+
+from repro.core.cms import CountMinFilter
+from repro.core.hint_filter import (EMIT, SUPPRESS_BUDGET, SUPPRESS_COLD,
+                                    SUPPRESS_HOT, SUPPRESS_RESIDENT,
+                                    HintFilter)
+
+CMS = {"depth": 4, "width": 1000, "threshold": 20, "aging_interval": 1000}
+
+
+def test_bad_mode_raises():
+    with pytest.raises(ValueError):
+        HintFilter(mode="sometimes")
+
+
+# ---------------------------------------------------------------- all / hot
+def test_all_mode_admits_everything_but_still_counts():
+    f = HintFilter(mode="all", cms_conf=CMS)
+    for i in range(100):
+        assert f.admit(7, now=i * 1e-3)
+    assert f.counters[EMIT] == 100
+    assert sum(v for k, v in f.counters.items() if k != EMIT) == 0
+    # the CMS counted every admission, so estimates stay comparable
+    # across modes
+    assert f.cms.estimate(7) >= 20
+
+
+def test_hot_mode_matches_legacy_inline_rule():
+    """Default mode is counter-for-counter identical to the old inline
+    ``update_and_classify`` call sites."""
+    f = HintFilter(mode="hot", cms_conf=CMS)
+    legacy = CountMinFilter(**CMS)
+    rng = random.Random(3)
+    keys = [rng.randrange(40) for _ in range(3000)]
+    suppressed = 0
+    for i, k in enumerate(keys):
+        hot = legacy.update_and_classify(k)
+        suppressed += hot
+        assert f.admit(k, now=i * 1e-4) == (not hot)
+    assert f.counters[SUPPRESS_HOT] == suppressed
+    assert f.counters[EMIT] == len(keys) - suppressed
+    assert (f.cms.counters == legacy.counters).all()
+
+
+def test_hot_mode_ignores_freq_key():
+    """The legacy rule classified the FULL key; freq_key is a
+    selective-mode concept and must not perturb hot mode."""
+    a = HintFilter(mode="hot", cms_conf=CMS)
+    b = HintFilter(mode="hot", cms_conf=CMS)
+    for i in range(50):
+        va = a.admit(("pane", 1), now=0.0)
+        vb = b.admit(("pane", 1), now=0.0, freq_key="base")
+        assert va == vb
+    assert a.counters == b.counters
+
+
+# ----------------------------------------------------------- selective mode
+def test_residency_suppression_requires_min_est():
+    """A recently-hinted key is only presumed still resident (and its
+    re-hint suppressed) once its frequency estimate clears
+    ``resident_min_est`` — cold keys lose capacity fights, so their
+    re-hints must go through."""
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=1.0,
+                   resident_min_est=4)
+    # est 1..3: below min_est, every admission passes despite the TTL
+    for i in range(3):
+        assert f.admit("k", now=0.01 * i)
+    # est 4: inside the TTL and now trusted resident -> suppressed
+    assert not f.admit("k", now=0.04)
+    assert f.last_verdict == SUPPRESS_RESIDENT
+    assert f.counters[SUPPRESS_RESIDENT] == 1
+
+
+def test_residency_suppression_expires_with_ttl():
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=0.05)
+    assert f.admit("k", now=0.0)
+    assert not f.admit("k", now=0.01)        # inside TTL
+    assert f.admit("k", now=0.06)            # TTL expired: readmitted
+    assert f.counters[EMIT] == 2
+    assert f.counters[SUPPRESS_RESIDENT] == 1
+
+
+def test_freq_key_separates_frequency_from_identity():
+    """Panes of one base key share a frequency stream (freq_key) but
+    keep per-pane residency: a NEW pane of a hot base is admitted even
+    though the previous pane was just hinted."""
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=1.0,
+                   resident_min_est=4)
+    for i in range(10):
+        f.admit(("b", 1), now=0.001 * i, freq_key="b")
+    # base "b" is well past min_est; pane ("b", 2) was never hinted
+    assert f.admit(("b", 2), now=0.02, freq_key="b")
+    assert not f.admit(("b", 2), now=0.03, freq_key="b")  # now resident
+
+
+def test_cold_threshold_suppresses_first_occurrences():
+    f = HintFilter(mode="selective", cms_conf=CMS, cold_threshold=2,
+                   resident_min_est=10 ** 6)
+    assert not f.admit("k", now=0.0)         # est 1 <= 2
+    assert f.last_verdict == SUPPRESS_COLD
+    assert not f.admit("k", now=0.1)         # est 2 <= 2
+    assert f.admit("k", now=0.2)             # est 3: warm enough
+    assert f.counters[SUPPRESS_COLD] == 2
+
+
+def test_budget_prioritises_hot_keys_when_dry():
+    f = HintFilter(mode="selective", cms_conf=CMS, budget_per_s=50.0,
+                   priority_threshold=5, resident_min_est=10 ** 6)
+    for _ in range(30):                      # hot key, bypasses the bucket
+        f.cms.update("hot")
+    assert f.admit("cold1", now=0.0)         # consumes the single token
+    assert not f.admit("cold2", now=0.0)     # dry + est below priority
+    assert f.last_verdict == SUPPRESS_BUDGET
+    assert f.admit("hot", now=0.0)           # dry but est >= priority
+    assert f.admit("cold2", now=1.0)         # bucket refilled
+    assert f.counters[SUPPRESS_BUDGET] == 1
+
+
+def test_note_emit_sweeps_expired_residency_entries():
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=0.01,
+                   sweep_every=4)
+    for i in range(4):
+        f.note_emit(f"k{i}", now=0.1 * i)
+    # the 4th note triggers a sweep at t=0.3: only k3 is within the TTL
+    assert list(f._last_emit) == ["k3"]
+
+
+# -------------------------------------------------------------- speculation
+def test_speculate_ok_gates_on_frequency():
+    f = HintFilter(mode="selective", cms_conf=CMS, speculative=True)
+    assert not f.speculate_ok("k")           # never seen: not worth it
+    for _ in range(f.spec_min_est):
+        f.cms.update("k")
+    assert f.speculate_ok("k")
+    g = HintFilter(mode="selective", cms_conf=CMS)   # speculation off
+    for _ in range(50):
+        g.cms.update("k")
+    assert not g.speculate_ok("k")
+
+
+def test_speculative_emit_marks_key_resident():
+    """note_emit on a speculated key makes the later data-driven hint a
+    suppressed (correct) duplicate."""
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=1.0)
+    f.note_emit("k", now=0.0)
+    assert not f.admit("k", now=0.01)
+    assert f.last_verdict == SUPPRESS_RESIDENT
+
+
+# ------------------------------------------------------------ reset/rollup
+def test_reset_clears_soft_state():
+    f = HintFilter(mode="selective", cms_conf=CMS, resident_ttl=10.0,
+                   budget_per_s=50.0)
+    assert f.admit("k", now=0.0)
+    assert not f.admit("k", now=0.1)
+    f.reset()
+    assert f.cms.estimate("k") == 0
+    assert f._tokens == f._bucket_cap
+    assert f.admit("k", now=0.2)             # residency map cleared
+
+
+def test_metrics_block_has_mode_and_all_verdicts():
+    f = HintFilter(mode="selective", cms_conf=CMS)
+    blk = f.metrics_block()
+    assert blk["mode"] == "selective"
+    for k in (EMIT, SUPPRESS_HOT, SUPPRESS_RESIDENT, SUPPRESS_COLD,
+              SUPPRESS_BUDGET):
+        assert blk[k] == 0
+
+
+# ------------------------------------------------------------- device twin
+def test_classify_batch_kernel_matches_host_semantics():
+    """The cms_sketch Pallas twin (interpret mode): repeated keys cross
+    the hot threshold, unseen keys stay cold — same SEMANTICS as the
+    host sketch even though the hash values differ."""
+    jnp = pytest.importorskip("jax.numpy")  # noqa: F841  (kernel needs jax)
+    f = HintFilter(mode="selective",
+                   cms_conf=dict(CMS, threshold=8, aging_interval=10 ** 6))
+    for _ in range(3):
+        f.classify_batch([5] * 4)            # 12 updates of key 5
+    mask = f.classify_batch([5, 999])
+    assert bool(mask[0]) and not bool(mask[1])
+    f.reset()
+    mask = f.classify_batch([5, 999])        # device state rebuilt cold
+    assert not mask.any()

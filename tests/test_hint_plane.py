@@ -1,0 +1,225 @@
+"""Hint-quality plane tests (DESIGN.md §13 over the §12 telemetry):
+
+* deterministic PrefetchRecorder regression tests under scripted
+  suppression/access schedules — every suppressed hint resolves to
+  exactly one of resident/miss/unused, and the §12 precision/recall
+  formulas are unchanged by suppression;
+* live-engine runs with a selective/speculative HintFilter — the
+  suppression ledger closes, speculation emits, and the delta codec
+  compresses the hint channel without touching latency accounting;
+* the adversarial distribution-shift run (ISSUE 7): a mid-stream hot-set
+  flip must not let stale CMS state suppress the new hot set beyond one
+  aging period — gated on the prefetch hit rate staying at the all-hints
+  level.
+"""
+import pytest
+
+from repro.obs import MetricsRegistry, PrefetchRecorder
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def make_recorder(horizon=1.0):
+    clock = Clock()
+    reg = MetricsRegistry()
+    rec = PrefetchRecorder(reg, "engine.op", clock,
+                           suppress_horizon=horizon)
+    return rec, clock
+
+
+def suppression_counts(rec):
+    return (rec.suppressed.value, rec.suppress_resident.value,
+            rec.suppress_miss.value, rec.suppress_unused.value)
+
+
+def assert_ledger_closes(rec):
+    """Invariant: suppressed == resident + miss + unused + pending."""
+    s, r, m, u = suppression_counts(rec)
+    pending = sum(n for _t, n in rec.pending_suppressed.values())
+    assert s == r + m + u + pending
+
+
+# ------------------------------------------------- scripted recorder runs
+def test_suppress_then_hit_grades_resident():
+    rec, clock = make_recorder()
+    rec.on_suppressed("k")
+    assert_ledger_closes(rec)
+    clock.t = 0.1
+    rec.on_access("k", hit=True)
+    assert suppression_counts(rec) == (1, 1, 0, 0)
+    assert not rec.pending_suppressed
+    assert_ledger_closes(rec)
+
+
+def test_suppress_then_miss_grades_miss():
+    rec, clock = make_recorder()
+    rec.on_suppressed("k")
+    clock.t = 0.1
+    rec.on_access("k", hit=False)
+    assert suppression_counts(rec) == (1, 0, 1, 0)
+    assert_ledger_closes(rec)
+
+
+def test_repeated_suppressions_fold_and_share_one_outcome():
+    rec, clock = make_recorder()
+    for i in range(3):
+        clock.t = 0.01 * i
+        rec.on_suppressed("k")
+    assert rec.pending_suppressed["k"] == [0.0, 3]
+    clock.t = 0.1
+    rec.on_access("k", hit=False)
+    assert suppression_counts(rec) == (3, 0, 3, 0)
+    assert_ledger_closes(rec)
+
+
+def test_access_beyond_horizon_grades_unused():
+    """An access long after the suppression is unrelated to it: the
+    hint would have been wasted anyway, whatever the access outcome."""
+    rec, clock = make_recorder(horizon=1.0)
+    rec.on_suppressed("k")
+    clock.t = 1.5
+    rec.on_access("k", hit=False)
+    assert suppression_counts(rec) == (1, 0, 0, 1)
+    assert_ledger_closes(rec)
+
+
+def test_flush_pending_closes_the_ledger():
+    rec, clock = make_recorder()
+    rec.on_suppressed("a")
+    rec.on_suppressed("b")
+    clock.t = 0.1
+    rec.on_access("a", hit=True)
+    rec.flush_pending()
+    assert suppression_counts(rec) == (2, 1, 0, 1)
+    assert not rec.pending_suppressed
+    assert_ledger_closes(rec)
+
+
+def test_periodic_expiry_reclaims_stale_pending_entries():
+    rec, clock = make_recorder(horizon=0.5)
+    rec.on_suppressed("stale")
+    clock.t = 2.0
+    # 1023 more suppressions of distinct keys trigger the 1024-step
+    # sweep, which grades the stale entry without any access
+    for i in range(1023):
+        rec.on_suppressed(("fresh", i))
+    assert "stale" not in rec.pending_suppressed
+    assert rec.suppress_unused.value >= 1
+    assert_ledger_closes(rec)
+
+
+def test_unknown_access_is_a_noop():
+    rec, _clock = make_recorder()
+    rec.on_access("never-suppressed", hit=True)
+    assert suppression_counts(rec) == (0, 0, 0, 0)
+
+
+def test_quality_block_formulas_unchanged_by_suppression():
+    """§12: precision = used / (staged + late), recall = hits /
+    (hits + demand) — suppression adds fields, never re-weights them."""
+    rec, clock = make_recorder()
+    for _ in range(4):
+        rec.on_staged()
+    clock.t = 0.2
+    rec.on_used(stage_t=0.1)
+    rec.on_used(stage_t=0.15)
+    rec.on_wasted()
+    rec.on_late(first_need_t=0.19)
+    rec.on_suppressed("k")
+    rec.on_access("k", hit=False)
+    blk = rec.quality_block(prefetch_hits=6, demand_fetches=2,
+                            duplicates=3, late_wm=1)
+    assert blk["precision"] == pytest.approx(2 / (4 + 1))
+    assert blk["recall"] == pytest.approx(6 / (6 + 2))
+    # every staged hint still ends in exactly one §12 outcome
+    assert blk["used"] + blk["wasted"] + blk["resident_unused"] \
+        == blk["staged"]
+    # and every suppressed hint in exactly one §13 outcome
+    assert blk["suppressed"] == blk["suppress_resident"] \
+        + blk["suppress_miss"] + blk["suppress_unused"] \
+        + blk["suppress_pending"]
+    assert blk["suppress_miss"] == 1
+    assert blk["suppress_pending"] == 0
+
+
+# ---------------------------------------------------- live engine runs
+def run_q5(key_dist="zipf", hint_filter=None, compress=True,
+           duration=1.5, rate=2_000.0):
+    from repro.streaming.backend import LOCAL_NVME
+    from repro.streaming.nexmark import NexmarkConfig, build_query
+    cfg = NexmarkConfig(rate=rate, active_window=1.0, oo_bound=0.3,
+                        seed=7, key_dist=key_dist, shift_interval=0.4)
+    eng = build_query("q5", "tac", "prefetch", cfg, cache_entries=128,
+                      backend=LOCAL_NVME, parallelism=2,
+                      source_parallelism=1, io_workers=4,
+                      buffer_timeout=0.0005, window_size=0.5,
+                      window_slide=0.25, hint_filter=hint_filter,
+                      compress_hints=compress)
+    return eng.run(duration=duration, warmup=0.4)
+
+
+SELECTIVE = {"mode": "selective", "resident_ttl": 0.05,
+             "resident_min_est": 4}
+
+
+@pytest.fixture(scope="module")
+def q5_selective():
+    return run_q5(hint_filter=dict(SELECTIVE, speculative=True,
+                                   spec_width=2))
+
+
+def test_live_suppression_ledger_closes(q5_selective):
+    m = q5_selective
+    hq = m["stateful_hint_quality"]
+    filt = m["win_lookahead_hint_filter"]
+    assert filt["mode"] == "selective"
+    suppressed_src = sum(v for k, v in filt.items()
+                        if str(k).startswith("suppressed_"))
+    assert hq["suppressed"] == suppressed_src > 0
+    # Engine.run flushed the pending map: every suppression graded
+    assert hq["suppress_pending"] == 0
+    assert hq["suppressed"] == hq["suppress_resident"] \
+        + hq["suppress_miss"] + hq["suppress_unused"]
+    # staged outcomes still partition (§12 untouched by §13)
+    assert hq["used"] + hq["wasted"] + hq["resident_unused"] \
+        == hq["staged"]
+
+
+def test_live_speculation_emits_next_pane_hints(q5_selective):
+    m = q5_selective
+    assert m["win_lookahead_speculative_hints"] > 0
+
+
+def test_live_delta_codec_compresses_without_touching_latency():
+    base = run_q5(hint_filter=None, compress=False)
+    comp = run_q5(hint_filter=None, compress=True)
+    # identical simulation: codec changes byte ACCOUNTING only
+    assert comp["p99"] == base["p99"]
+    assert comp["n_outputs"] == base["n_outputs"]
+    assert base["hint_bytes"] == base.get("hint_bytes_raw", base["hint_bytes"])
+    assert comp["hint_bytes_raw"] == base["hint_bytes"]
+    assert comp["hint_bytes"] < comp["hint_bytes_raw"]
+    assert comp["hint_compression"] > 1.5
+
+
+# ------------------------------------------- adversarial distribution shift
+def test_shift_does_not_let_stale_cms_starve_new_hot_set():
+    """ISSUE 7 satellite: flip the hot set mid-stream (key_dist="shift",
+    several epochs per run).  CMS aging must retire the stale hot set
+    fast enough that selective suppression never starves the new one:
+    the prefetch hit rate and recall stay at the all-hints level, and
+    incorrect suppressions stay a small fraction of the total."""
+    allh = run_q5(key_dist="shift", hint_filter={"mode": "all"},
+                  duration=2.5)
+    sel = run_q5(key_dist="shift", hint_filter=SELECTIVE, duration=2.5)
+    assert sel["stateful_hit_rate"] >= allh["stateful_hit_rate"] - 0.02
+    hq_sel = sel["stateful_hint_quality"]
+    hq_all = allh["stateful_hint_quality"]
+    assert hq_sel["recall"] >= hq_all["recall"] - 0.05
+    assert hq_sel["suppress_miss"] <= 0.2 * max(1, hq_sel["suppressed"])

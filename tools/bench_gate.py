@@ -21,7 +21,13 @@ its headline advantage on the (smoke) config it was run with:
     must be >= 0.95x disabled (the observability plane's overhead
     contract, ISSUE 6), the traced run must report a dominant
     critical-path stage, and its hint-quality block must have staged
-    hints with precision/recall in (0, 1].
+    hints with precision/recall in (0, 1];
+  * hints (``BENCH_hints*.json``): on the Zipf scenario, for every
+    query present, selective admission's p99 must be <= all-hints p99,
+    and on the distribution-sensitive queries (q5, q20) its wasted-hint
+    ratio must be strictly lower (q8's join keys are drawn uniformly
+    regardless of ``key_dist``, so it is a structural control — p99
+    bound only; ISSUE 7 acceptance).
 
 Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
 """
@@ -156,6 +162,45 @@ def gate_obs(data: dict, fails: list, name: str) -> None:
                      f"recall={rec})")
 
 
+# the queries whose key distribution actually follows ``key_dist`` —
+# q8 joins persons x auctions on uniformly drawn ids, so selective
+# admission cannot (and need not) cut its waste under zipf
+DIST_SENSITIVE = ("q5", "q20")
+
+
+def gate_hints(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        zipf = data[q].get("zipf")
+        if not zipf:
+            fails.append(f"{name}: {q} missing zipf scenario")
+            continue
+        rs_all, rs_sel = zipf.get("allhints"), zipf.get("selective")
+        if not rs_all or not rs_sel:
+            fails.append(f"{name}: {q} zipf missing allhints/selective "
+                         f"results")
+            continue
+        ok = rs_sel["p99"] <= rs_all["p99"]
+        print(f"  hints {q}: selective p99 {rs_sel['p99']*1e3:.2f}ms vs "
+              f"all-hints {rs_all['p99']*1e3:.2f}ms -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} selective p99 ({rs_sel['p99']:.4f}s)"
+                         f" > all-hints ({rs_all['p99']:.4f}s) on zipf")
+        if q not in DIST_SENSITIVE:
+            continue
+        wa, ws = rs_all["wasted_hint_ratio"], rs_sel["wasted_hint_ratio"]
+        ok = ws < wa
+        print(f"  hints {q}: selective wasted-hint ratio {ws:.3f} vs "
+              f"all-hints {wa:.3f} -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} selective wasted-hint ratio "
+                         f"({ws:.3f}) not strictly below all-hints "
+                         f"({wa:.3f}) on zipf")
+
+
 def main(argv) -> int:
     if not argv:
         print("usage: bench_gate.py BENCH_*.json ...")
@@ -183,6 +228,8 @@ def main(argv) -> int:
             gate_recovery(data, fails, name)
         elif "obs" in name:
             gate_obs(data, fails, name)
+        elif "hints" in name:
+            gate_hints(data, fails, name)
         else:
             fails.append(f"{name}: no gate rule for this artifact")
     if fails:
