@@ -38,16 +38,26 @@ WORKLOADS: Dict[str, Dict[str, Any]] = {
 
 DUR, WARM = 6.0, 3.0
 
+# run.py --fused sets this: workloads with a FusedSpec (ysb here; q5/q7
+# when passed as overrides) run their stateful hot path on the device
+# (DESIGN.md §14); the rest keep the interpreted inner loop
+FUSED = False
+_FUSED_QUERIES = ("q5", "q7")
+
 
 def _build(workload: str, policy: str, mode: str, **over):
     cfgd = dict(WORKLOADS[workload])
     cfgd.update(over)
     if workload == "ysb":
         ycfg = YSBConfig(rate=cfgd.pop("rate"))
+        if FUSED:
+            cfgd.setdefault("fused", True)
         return build_ysb(policy, mode, ycfg, **cfgd)
     ncfg = NexmarkConfig(rate=cfgd.pop("rate"),
                          active_window=cfgd.pop("active_window", 60.0),
                          hot_auction_prob=cfgd.pop("hot_auction_prob", 0.5))
+    if FUSED and workload in _FUSED_QUERIES:
+        cfgd.setdefault("fused", True)
     return build_query(workload, policy, mode, ncfg, **cfgd)
 
 

@@ -19,6 +19,11 @@ def main() -> None:
     ap.add_argument("--recover", default="warmed,cold",
                     help="comma list of recovery modes to run with "
                          "--fail-at (warmed|cold)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run stateful hot paths on the fused device "
+                         "plane where a FusedSpec exists (ysb; q5/q7 "
+                         "overrides) — other workloads stay interpreted "
+                         "(DESIGN.md §14)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -26,6 +31,7 @@ def main() -> None:
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)              # `benchmarks` package itself
     from benchmarks import paper, roofline
+    paper.FUSED = args.fused
 
     if args.fail_at is not None:
         from benchmarks import recovery as rbench

@@ -31,7 +31,8 @@ from repro.streaming.engine import (Engine, MapOp, SinkOp, SourceOp,
 from repro.streaming.events import Tuple_
 
 
-def build(policy: str, mode: str, replayable: bool = False) -> Engine:
+def build(policy: str, mode: str, replayable: bool = False,
+          fused: bool = False) -> Engine:
     eng = Engine()
     rng = random.Random(1)
     n_cards = 200_000
@@ -55,6 +56,28 @@ def build(policy: str, mode: str, replayable: bool = False) -> Engine:
         return hist, [Tuple_(tup.ts, tup.key, {"score": score}, 64,
                              tup.ingest_t)]
 
+    fused_kw = {}
+    if fused:
+        # declarative device form of risk() (DESIGN.md §14): state is
+        # the [count, total] pair, each transaction adds [1, amount],
+        # and the score emit reads the composed post-update value
+        from repro.streaming.fused import FusedSpec
+
+        def score_of(tup, hist):
+            amount = tup.payload["amount"]
+            score = amount / (1 + hist["total"] / hist["n"])
+            return [Tuple_(tup.ts, tup.key, {"score": score}, 64,
+                           tup.ingest_t)]
+
+        fused_kw = dict(fused=FusedSpec(
+            kind="sum", width=2,
+            weight_of=lambda tup: [1.0, tup.payload["amount"]],
+            encode=lambda s: None if s is None
+            else [float(s["n"]), float(s["total"])],
+            decode=lambda v: {"n": int(round(float(v[0]))),
+                              "total": float(v[1])},
+            emit_of=score_of))
+
     src = eng.add(SourceOp(eng, "source", 1, 20_000, gen,
                            replayable=replayable))
     extract = eng.add(MapOp(eng, "extract", 2, service_time=12e-6,
@@ -65,7 +88,8 @@ def build(policy: str, mode: str, replayable: bool = False) -> Engine:
                                 cache_capacity=512 * 300, policy=policy,
                                 mode=mode, io_workers=3, state_size=300,
                                 default_state=lambda k: {"n": 0,
-                                                         "total": 0.0}))
+                                                         "total": 0.0},
+                                **fused_kw))
     sink = eng.add(SinkOp(eng, "sink", 1))
     eng.connect(src, extract)
     eng.connect(extract, normalize)
@@ -88,6 +112,10 @@ def main():
                     help="recovery mode after --fail-at: 'warmed' replays "
                          "the hint log before the data path resumes")
     ap.add_argument("--checkpoint-interval", type=float, default=0.5)
+    ap.add_argument("--fused", action="store_true",
+                    help="add a fused device-path run (DESIGN.md §14): "
+                         "the risk operator's probe/update/emit loop "
+                         "compiles to one jitted program per batch")
     args = ap.parse_args()
 
     if args.fail_at is not None:
@@ -116,13 +144,18 @@ def main():
         return
 
     print("fraud-detection quickstart (6s simulated stream, 20k tx/s)")
-    for label, policy, mode in [("cache-only (sync)", "lru", "sync"),
-                                ("async I/O", "lru", "async"),
-                                ("keyed prefetching", "tac", "prefetch")]:
-        m = build(policy, mode).run(duration=5.0, warmup=2.0)
+    runs = [("cache-only (sync)", "lru", "sync", False),
+            ("async I/O", "lru", "async", False),
+            ("keyed prefetching", "tac", "prefetch", False)]
+    if args.fused:
+        runs.append(("fused device path", "tac", "prefetch", True))
+    for label, policy, mode, fused in runs:
+        m = build(policy, mode, fused=fused).run(duration=5.0, warmup=2.0)
+        fill = m.get("stateful_fused", {}).get("fill_ratio")
+        extra = f" batch-fill={fill:.2f}" if fill is not None else ""
         print(f"  {label:22s} p50={m['p50']*1e3:7.2f}ms "
               f"p999={m['p999']*1e3:8.2f}ms "
-              f"cache-hit={m.get('stateful_hit_rate', 0):.3f}")
+              f"cache-hit={m.get('stateful_hit_rate', 0):.3f}{extra}")
 
 
 if __name__ == "__main__":

@@ -15,13 +15,19 @@ serving arena's write-back path needs them).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.tac_probe.ops import bucket_of, tac_probe
+from repro.kernels.page_gather.page_gather import (page_gather_kernel,
+                                                   page_scatter_kernel)
+from repro.kernels.page_gather.ref import page_gather_ref
+from repro.kernels.tac_probe.ops import bucket_of, tac_probe, \
+    tac_probe_gather
+from repro.kernels.tac_probe.ref import tac_probe_ref
 
 
 class TACState(NamedTuple):
@@ -366,3 +372,214 @@ def set_dirty(state: TACState, keys: jax.Array,
     else:
         d_int = d_int.at[b, safe].min(jnp.where(hit, 0, 1))
     return state._replace(dirty=d_int > 0)
+
+
+# ------------------------------------------------------- fused hot path §14
+# The device data plane of the fused execution mode (DESIGN.md §14): the
+# stateful-operator inner loop — probe → gather → operator compute →
+# scatter write-back — compiled into ONE jitted program per operator
+# config.  The payload pool is ``pages [n_slots + 1, 1, V + 1]``: channel
+# 0 is a presence flag (0 = the pane was never written; decodes to the
+# Python side's ``None``), channels 1..V the value vector, and the LAST
+# row a zeroed scratch slot that miss/read/padding lanes alias so their
+# scatters are inert.  The host shadow directory (streaming/fused.py)
+# owns eviction ORDER and slot assignment; the device directory
+# (``TACState.keys``) is authoritative for MEMBERSHIP and the pool for
+# payloads — both only change through the entry points below, so they
+# agree by construction.
+
+# The fused entry points below are LATENCY-critical: one call per engine
+# batch, plus one per single-key cold-path op.  ``interpret=True`` means
+# no real TPU backend is in play — and the pallas interpreter emulates
+# the kernel grid step by step, orders of magnitude slower than the XLA
+# program the same jit would otherwise produce.  So in interpret mode
+# the probe/gather/scatter run as the kernels' pure-jnp reference ops
+# fused into the surrounding jitted program (bit-identical semantics;
+# tests/test_kernels.py holds kernel and reference to each other), and
+# the pallas kernels serve the ``interpret=False`` accelerator path.
+
+def _probe_gather(keys, state: "TACState", pages, interpret: bool):
+    if not interpret:
+        return tac_probe_gather(keys, state.keys, state.vals, pages,
+                                interpret=False)
+    n_buckets, ways = state.keys.shape
+    trash = pages.shape[0] - 1
+    if n_buckets == 1:
+        # fully-associative fast path (every FusedPlane directory):
+        # membership is a broadcast compare against the one bucket, and
+        # first-match resolves via iota-min — argmax lowers ~3x slower
+        # on the CPU backend, and the directory-vals gather the generic
+        # probe does is dead weight here (payloads live in the pool)
+        match = state.keys[0][None, :] == keys[:, None]
+        iota = jnp.arange(ways, dtype=jnp.int32)
+        way = jnp.min(jnp.where(match, iota, ways), axis=1)
+        hit = way < ways
+        slots = jnp.where(hit, jnp.minimum(way, ways - 1),
+                          trash).astype(jnp.int32)
+    else:
+        buckets = bucket_of(keys, n_buckets)
+        _, hiti, way = tac_probe_ref(keys.astype(jnp.int32), buckets,
+                                     state.keys, state.vals)
+        hit = hiti.astype(bool)
+        slots = jnp.where(hit, buckets * ways + jnp.maximum(way, 0),
+                          trash).astype(jnp.int32)
+    return page_gather_ref(slots, pages), hit, slots
+
+
+def _gather(slots, pages, interpret: bool):
+    if not interpret:
+        return page_gather_kernel(slots, pages, interpret=False)
+    return page_gather_ref(slots, pages)
+
+
+def _scatter(slots, blocks, pages, interpret: bool):
+    if not interpret:
+        return page_scatter_kernel(slots, blocks, pages, interpret=False)
+    # last-write-wins matching the kernel's grid order: non-final writes
+    # to a duplicated slot redirect to the scratch row (the pool's last
+    # row, which fused callers keep zeroed / overwrite before reading)
+    B = slots.shape[0]
+    idx = jnp.arange(B)
+    later = (slots[None, :] == slots[:, None]) & \
+        (idx[None, :] > idx[:, None])
+    eff = jnp.where(later.any(axis=1), pages.shape[0] - 1, slots)
+    return pages.at[eff].set(blocks)
+
+
+class FusedStep(NamedTuple):
+    state: TACState
+    pages: jax.Array
+    hit: jax.Array        # [B] bool   (padding lanes forced False)
+    slots: jax.Array      # [B] int32  flat slot; scratch for miss/padding
+    new_vals: jax.Array   # [B, V]     value AFTER this lane's update,
+    #                       prefix-composed over earlier same-key lanes
+    present: jax.Array    # [B] bool   presence flag after this lane
+    tallies: jax.Array    # [2] int32  (hits, misses) over valid lanes
+
+
+@partial(jax.jit, static_argnames=("kind", "interpret"))
+def fused_step(state: TACState, pages: jax.Array, keys: jax.Array,
+               ts: jax.Array, weights: jax.Array, fire: jax.Array,
+               valid: jax.Array, *, kind: str = "sum",
+               interpret: bool = True) -> FusedStep:
+    """One fused batch over the resident working set.
+
+    ``kind`` picks the operator compute (static — one compiled program
+    per operator config): ``sum`` (count is sum of ones), ``max``, or
+    ``read`` (no state update, read-only enrichment).  ``weights`` is
+    ``[B, V]``; ``fire`` lanes read the pane without updating it.
+
+    Duplicate keys in one batch compose EXACTLY as the interpreted
+    sequential loop: lane i's ``new_vals`` folds in every earlier
+    same-key update lane (lower-triangular mask), and the scatter's
+    last-write-wins grid order leaves the final composed value in the
+    pool.  The batching contract (streaming/fused.py) never mixes a fire
+    lane and an update lane of the same key in one batch.
+
+    Miss lanes are NOT admitted here — the host parks their tuples and
+    admissions arrive later through ``fused_admit`` (the asynchronous
+    fetch path, DESIGN.md §2) — so a miss lane's only trace is its tally.
+    """
+    B = keys.shape[0]
+    n_buckets, ways = state.keys.shape
+    trash = pages.shape[0] - 1
+    rows, hit, slots = _probe_gather(keys, state, pages, interpret)
+    hit = hit & valid
+    slots = jnp.where(hit, slots, trash)
+    safe_b = jnp.where(hit, slots // ways, 0)
+    safe_w = jnp.where(hit, slots % ways, 0)
+    # timestamp refresh on hits (advisory fp32 copy; the fp64 eviction
+    # order lives in the host shadow, §14)
+    new_ts = state.ts.at[safe_b, safe_w].max(
+        jnp.where(hit, ts, -jnp.inf))
+    g = rows[:, 0, 1:]                         # [B, V] current value
+    f = rows[:, 0, 0] > 0.5                    # [B] presence
+    if kind == "read":
+        upd = jnp.zeros_like(hit)
+    else:
+        upd = hit & ~fire
+    same = keys[:, None] == keys[None, :]
+    M = same & upd[None, :] & jnp.tril(jnp.ones((B, B), bool))
+    hasupd = M.any(axis=1)
+    if kind == "max":
+        m = jnp.where(M[:, :, None], weights[None, :, :],
+                      -jnp.inf).max(axis=1)
+        new_v = jnp.maximum(jnp.where(f[:, None], g, -jnp.inf), m)
+    else:                                      # sum (count = sum of ones)
+        new_v = jnp.where(f[:, None], g, 0.0) + \
+            M.astype(weights.dtype) @ weights
+    present = f | hasupd
+    new_v = jnp.where(present[:, None], new_v, 0.0)
+    dirty = state.dirty
+    if kind != "read":
+        blocks = jnp.concatenate(
+            [present[:, None].astype(pages.dtype),
+             new_v.astype(pages.dtype)], axis=1)[:, None, :]
+        wslots = jnp.where(upd, slots, trash)
+        pages = _scatter(wslots, blocks, pages, interpret)
+        # the scratch row must stay "absent" for future miss gathers
+        pages = pages.at[trash].set(0.0)
+        d_int = state.dirty.astype(jnp.int32).at[safe_b, safe_w].max(
+            jnp.where(upd, 1, 0))
+        dirty = d_int > 0
+    tallies = jnp.stack([hit.sum(), (valid & ~hit).sum()]
+                        ).astype(jnp.int32)
+    return FusedStep(state._replace(ts=new_ts, dirty=dirty), pages,
+                     hit, slots, new_v, present, tallies)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_admit(state: TACState, pages: jax.Array, slots: jax.Array,
+                keys: jax.Array, ts: jax.Array, rows: jax.Array,
+                present: jax.Array, dirty: jax.Array, *,
+                interpret: bool = True):
+    """Admit at HOST-CHOSEN slots (the shadow directory resolved victims
+    and free slots; a slot may repeat only as an IDENTICAL padding
+    duplicate of an earlier lane — chunked flushes pad to fixed jit
+    shapes that way).  Gathers the pre-overwrite victim rows first — a
+    dirty victim's value feeds the eviction buffer for asynchronous
+    write-back — then scatters the new rows and updates the device
+    directory.  Returns ``(state, pages, victim_rows [B, 1, V+1])``."""
+    n_buckets, ways = state.keys.shape
+    b, w = slots // ways, slots % ways
+    victim_rows = _gather(slots, pages, interpret)
+    blocks = jnp.concatenate(
+        [present[:, None].astype(pages.dtype),
+         rows.astype(pages.dtype)], axis=1)[:, None, :]
+    new_pages = _scatter(slots, blocks, pages, interpret)
+    # duplicate pads spill their non-final writes into the scratch row;
+    # it must read as "absent" for future miss/padding gathers
+    new_pages = new_pages.at[-1].set(0.0)
+    st = TACState(
+        keys=state.keys.at[b, w].set(keys.astype(jnp.int32)),
+        ts=state.ts.at[b, w].set(ts.astype(jnp.float32)),
+        vals=state.vals,
+        dirty=state.dirty.at[b, w].set(dirty))
+    return st, new_pages, victim_rows
+
+
+@jax.jit
+def drop_slots(state: TACState, slots: jax.Array,
+               valid: jax.Array) -> TACState:
+    """Clear directory entries at host-chosen slots (window-pane purges,
+    drops).  Padding lanes (``valid`` False) alias slot 0, so the
+    clears use masked min/max scatters that are idempotent no-ops for
+    them.  Pool rows are left stale: a cleared slot can no longer be
+    probed, and the next ``fused_admit`` overwrites the row."""
+    ways = state.keys.shape[1]
+    b, w = slots // ways, slots % ways
+    imax = jnp.iinfo(jnp.int32).max
+    keys = state.keys.at[b, w].min(
+        jnp.where(valid, jnp.int32(-1), imax))
+    ts = state.ts.at[b, w].min(
+        jnp.where(valid, -jnp.inf, jnp.inf))
+    d_int = state.dirty.astype(jnp.int32).at[b, w].min(
+        jnp.where(valid, 0, 1))
+    return state._replace(keys=keys, ts=ts, dirty=d_int > 0)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(pages: jax.Array, slots: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """Pull payload rows at flat slots (single-key adapter reads)."""
+    return _gather(slots, pages, interpret)

@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.page_gather.page_gather import page_gather_kernel
 from repro.kernels.tac_probe.tac_probe import tac_probe_kernel
 
 _A, _B, _P = 2654435761, 40503, 2 ** 31 - 1
@@ -41,3 +42,29 @@ def tac_probe_counted(qkeys, bucket_keys, bucket_vals, *,
     miss = hit == 0
     counts = jnp.stack([hit.sum(), (miss & full).sum()]).astype(jnp.int32)
     return vals, hit, way, counts
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def tac_probe_gather(qkeys, bucket_keys, bucket_vals, pages, *,
+                     interpret: bool = True):
+    """Composed probe -> page gather (DESIGN.md §14): the directory probe
+    and the payload pull run in ONE traced program instead of two island
+    launches — the probe's (bucket, way) resolves to a flat slot id that
+    feeds ``page_gather_kernel``'s scalar-prefetch index_map directly.
+
+    ``pages`` is ``[n_slots + 1, page, d]``: the LAST row is a zeroed
+    scratch slot that miss lanes alias, so their gathered rows decode as
+    "absent" without any host-side masking.  Returns
+    ``(rows [B, page, d], hit [B] bool, slots [B] int32 flat)``.
+    """
+    n_buckets, ways = bucket_keys.shape
+    buckets = bucket_of(qkeys, n_buckets)
+    _, hit, way = tac_probe_kernel(qkeys.astype(jnp.int32), buckets,
+                                   bucket_keys, bucket_vals,
+                                   interpret=interpret)
+    hit = hit.astype(bool)
+    trash = pages.shape[0] - 1
+    slots = jnp.where(hit, buckets * ways + jnp.maximum(way, 0),
+                      trash).astype(jnp.int32)
+    rows = page_gather_kernel(slots, pages, interpret=interpret)
+    return rows, hit, slots

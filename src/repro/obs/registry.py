@@ -337,6 +337,17 @@ METRIC_CATALOG: Dict[str, str] = {
     "engine.<op>.prefetch.suppress_unused":
         "suppressions never followed by an in-horizon access (hint would "
         "have been wasted)",
+    # fused device hot path (§14): per-batch device tallies rolled up
+    # host-side after each launch
+    "engine.<op>.fused.batches": "fused device batches launched",
+    "engine.<op>.fused.lanes": "lanes staged across all fused batches",
+    "engine.<op>.fused.fill_ratio":
+        "lanes / (batches x batch width) — underfilled batches waste "
+        "launch cost (fences and drain stalls fragment them)",
+    "engine.<op>.fused.device_hits": "device TAC directory probe hits",
+    "engine.<op>.fused.device_misses":
+        "device TAC directory probe misses (host adjudicates: admit, "
+        "park, or write-back race)",
     # TAC eviction-reason breakdown, split by admission path
     "engine.<op>.evict.<reason>.<adm>":
         "evictions by reason (capacity|deadline|stale) and admission "

@@ -12,6 +12,8 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import defaultdict, deque
+
+import numpy as np
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -24,6 +26,7 @@ from repro.obs import (MetricsRegistry, PrefetchRecorder, QuantileSketch,
                        Tracer)
 from repro.runtime.compression import hint_batch_nbytes
 from repro.streaming.backend import BackendModel, StateBackend
+from repro.streaming.fused import FusedPlane, FusedSpec, Lane
 from repro.streaming.events import (CheckpointBarrier, Hint, Marker,
                                     Tuple_, Watermark)
 from repro.streaming.shards import (MIGRATE_BANDWIDTH, MIGRATE_RTT,
@@ -41,6 +44,10 @@ HINT_TIMEOUT = 0.2e-3               # hint side channel flushes aggressively:
 #                                   hints are tiny and latency-critical
 ASYNC_RESUME = 4e-6               # async I/O completion handling per tuple
 #                                   (paper §VI-A: thread/completion overheads)
+FUSED_LAUNCH = 4e-6               # one fused device-program dispatch (§14)
+FUSED_LANE = 0.3e-6               # per-lane share of a fused batch: the
+#                                   interpreter's ~3µs/tuple collapses to
+#                                   the kernel's per-element cost
 
 
 class Sim:
@@ -735,11 +742,23 @@ class StatefulOp(Operator):
                  miss_threshold: float = 0.0,
                  dense_backend: bool = False,
                  deadline_aware: bool = False,
-                 shards: Optional[ShardPlane] = None):
+                 shards: Optional[ShardPlane] = None,
+                 fused: Optional[FusedSpec] = None,
+                 fused_batch: int = 64):
         super().__init__(engine, name, parallelism, service_time)
         if shards is not None and shards.n_owners != parallelism:
             raise ValueError(f"ShardPlane has {shards.n_owners} owners for "
                              f"parallelism {parallelism}")
+        # fused execution mode (DESIGN.md §14): the keyed plane lives on
+        # device behind a FusedPlane and runs of data tuples batch into
+        # one jitted program; all control-plane paths stay interpreted
+        if fused is not None:
+            if shards is not None:
+                raise ValueError("fused mode runs on the unsharded plane")
+            if policy != "tac":
+                raise ValueError("fused mode requires policy='tac'")
+        self.fused_spec = fused
+        self.fused_batch = int(fused_batch)
         self.shards = shards
         self.shard_pending: Dict[int, List[Any]] = {}
         self.apply_fn = apply_fn           # (tup, state) -> (state', outputs)
@@ -809,12 +828,18 @@ class StatefulOp(Operator):
         histogram into every manager (re-run after reset_volatile
         recreates the caches)."""
         for c in self.caches:
-            if isinstance(c, TimestampAwareCache):
+            if isinstance(c, (TimestampAwareCache, FusedPlane)):
                 c.recorder = self.recorder
         for m in self.managers:
             m.lat_hist = self.access_hist
 
     def _new_cache(self):
+        if self.fused_spec is not None:
+            return FusedPlane(self.cache_capacity,
+                              entry_size=self.state_size,
+                              spec=self.fused_spec,
+                              deadline_aware=self.deadline_aware,
+                              batch=self.fused_batch)
         if self.policy == "tac":
             # deadline_aware: window panes carry far-future fire
             # deadlines, where plain min-ts eviction would remove the
@@ -1204,7 +1229,202 @@ class StatefulOp(Operator):
             self.busy_time[sub] += svc
             self.sim.after(svc, self._finish, sub)
             return
+        if self.fused_spec is not None and self.queues[sub] \
+                and isinstance(self.queues[sub][0], Tuple_):
+            # fused hot path (DESIGN.md §14): the head RUN of data tuples
+            # becomes one fixed-width device batch; control messages
+            # (watermarks, hints, barriers, markers) stay on the
+            # interpreted path above and naturally fence batches
+            self.busy[sub] = True
+            svc = self._fused_drain(sub)
+            self.busy_time[sub] += svc
+            self.sim.after(svc, self._finish, sub)
+            return
         super()._start(sub)
+
+    # ------------------------------------------------------ fused data path
+    def _fused_prospect(self, sub: int, tup: Tuple_):
+        """PURE preview of the state keys ``tup`` will touch and whether
+        it is a window fire — drives the batch conflict check (a fire
+        and an update of the same key never share a batch, §14)."""
+        return (tup.key,), False
+
+    def _fused_expand(self, sub: int, tup: Tuple_,
+                      keys=None) -> List[Lane]:
+        """Turn one dequeued tuple into device lanes (``keys`` is the
+        prospect's precomputed key tuple, so expansion never redoes the
+        window assignment).  Windowed subclasses expand to panes and
+        take the late checks here — mirroring their ``_on_data``
+        expansion."""
+        return [Lane(tup.key, tup.ts, self.fused_spec.weight_raw(tup),
+                     False, False, tup)]
+
+    def _fused_fire(self, sub: int, lane: Lane, state: Any) -> None:
+        raise RuntimeError("fire lane on a non-windowed operator")
+
+    def _fused_late(self, sub: int, lane: Lane, state: Any) -> None:
+        raise RuntimeError("late-update lane on a non-windowed operator")
+
+    def _fused_lane_tuple(self, lane: Lane) -> Tuple_:
+        """The tuple a lane parks/applies as: the source tuple itself,
+        or (windowed) a pane-keyed copy — identical to the expansion the
+        interpreted ``_on_data`` would have built."""
+        tup = lane.tup
+        if lane.key is tup.key or lane.key == tup.key:
+            return tup
+        return Tuple_(tup.ts, lane.key, tup.payload, tup.size,
+                      tup.ingest_t, trace=tup.trace)
+
+    def _fused_drain(self, sub: int) -> float:
+        """Assemble one batch from the head run of data tuples, then run
+        it through the device plane (§14).  Assembly stops at the batch
+        width, at the first non-data message, or at a fire/update
+        conflict (the conflicting tuple waits for the next batch, which
+        preserves sequential per-key semantics)."""
+        q = self.queues[sub]
+        B = self.fused_batch
+        lanes: List[Lane] = []
+        fire_keys: set = set()
+        upd_keys: set = set()
+        n_tuples = 0
+        while q and isinstance(q[0], Tuple_):
+            tup = q[0]
+            keys, is_fire = self._fused_prospect(sub, tup)
+            fence = upd_keys if is_fire else fire_keys
+            if fence and any(k in fence for k in keys):
+                break
+            if lanes and len(lanes) + len(keys) > B:
+                break
+            q.popleft()
+            n_tuples += 1
+            self.processed += 1
+            new = self._fused_expand(sub, tup, keys)
+            for ln in new:
+                (fire_keys if ln.fire else upd_keys).add(ln.key)
+            lanes.extend(new)
+            if len(lanes) >= B:
+                break
+        svc = 5e-7 * n_tuples           # dequeue + expand, per tuple
+        # a single tuple expanding wider than the batch runs chunked —
+        # in-order chunks of one drain preserve per-key sequencing
+        for i in range(0, len(lanes), B):
+            svc += self._fused_step(sub, lanes[i:i + B])
+        return svc
+
+    def _fused_step(self, sub: int, lanes: List[Lane]) -> float:
+        """One device batch + host post-step.  Device-HIT lanes finished
+        on device (state read/updated/written back in the jitted
+        program); every other lane is re-adjudicated IN LANE ORDER
+        through the interpreted cold paths (eviction-buffer restores,
+        memtable shield, sync refetch or parking) so counters, emits,
+        and state stay sequential-equivalent (§14)."""
+        plane = self.caches[sub]
+        mgr = self.managers[sub]
+        spec = self.fused_spec
+        n = len(lanes)
+        res = plane.batch_step(lanes)
+        svc = FUSED_LAUNCH + FUSED_LANE * n
+        if self.mode == "prefetch":
+            mgr.prefetch_hits += int(res.hit.sum())
+        # vectorized fast path: a PLAIN hit lane (update absorbed on
+        # device — not a fire, not a late update, no per-lane emits)
+        # needs no host work at all unless a trace or the hint-quality
+        # recorder is watching.  Only the exceptional lanes get the
+        # per-lane branch cascade below.
+        lane_idx = range(n)
+        if spec.emit_of is None and not self.recorder.pending_suppressed:
+            late = np.fromiter((ln.late_update for ln in lanes), bool, n)
+            plain = res.hit & ~res.fire & ~late
+            if plain.any() and not any(ln.tup.trace is not None
+                                       for ln in lanes):
+                lane_idx = np.nonzero(~plain)[0].tolist()
+        for i in lane_idx:
+            ln = lanes[i]
+            tup = ln.tup
+            tr = tup.trace
+            if tr is not None:
+                tr.mark_state(self.name, self.sim.t)
+            if res.hit[i]:
+                if tr is not None and tr.hit is None:
+                    tr.hit = True
+                if self.recorder.pending_suppressed:
+                    self.recorder.on_access(ln.key, hit=True)
+                if ln.fire:
+                    self._fused_fire(sub, ln, plane.decode_lane(res, i))
+                elif ln.late_update:
+                    self._fused_late(sub, ln, plane.decode_lane(res, i))
+                else:
+                    # per-lane emits from the composed post-lane value
+                    # (read enrichment, or sum/max specs with emit_of);
+                    # no emit_of = the update is absorbed on device
+                    outs = spec.emit_of(tup, plane.decode_lane(res, i)) \
+                        if spec.emit_of is not None else []
+                    if tr is not None:
+                        tr.mark_apply(self.sim.t)
+                    for o in outs:
+                        self.outputs += 1
+                        if tr is not None and \
+                                getattr(o, "trace", None) is None:
+                            o.trace = tr
+                        self.emit(sub, o)
+                    if not outs:
+                        self._trace_absorbed(tr)
+                continue
+            # ---- non-hit lane: interpreted adjudication, lane order
+            ptup = self._fused_lane_tuple(ln)
+            state = plane.lookup(ln.key, ln.ts)
+            if state is not None:
+                # eviction-buffer restore, or a key admitted by an
+                # earlier lane's cold path in this very drain
+                if tr is not None and tr.hit is None:
+                    tr.hit = True
+                if self.recorder.pending_suppressed:
+                    self.recorder.on_access(ln.key, hit=True)
+                if self.mode == "prefetch":
+                    mgr.prefetch_hits += 1
+                svc += self._apply(sub, ptup, state)
+                continue
+            wb = self.wb_pending[sub].get(ln.key)
+            if wb is not None:
+                if tr is not None and tr.hit is None:
+                    tr.hit = True
+                if self.recorder.pending_suppressed:
+                    self.recorder.on_access(ln.key, hit=True)
+                plane.insert(ln.key, wb.state, ln.ts,
+                             size=self.state_size)
+                svc += self._apply(sub, ptup, wb.state)
+                continue
+            if tr is not None and tr.hit is None:
+                tr.hit = False
+            if self.recorder.pending_suppressed:
+                self.recorder.on_access(ln.key, hit=False)
+            if self.mode == "prefetch" and not mgr.enabled:
+                la = mgr.on_cache_misses(self.sim.t)
+                if la is not None:
+                    self.engine.set_lookahead(self.name, la)
+            if self.mode == "sync":
+                state, lat = self.backends[sub].fetch(ln.key,
+                                                      self.state_size)
+                plane.insert(ln.key, state, ln.ts, size=self.state_size)
+                mgr.record_access_latency(lat)
+                self.blocked_time[sub] += lat
+                self.pf_demand.inc()
+                if tr is not None:
+                    tr.fetch_s += lat
+                svc += lat + self._apply(sub, ptup, state)
+                continue
+            if tr is not None:
+                tr.mark_park(self.sim.t)
+            if ln.key not in self._park_t[sub]:
+                self._park_t[sub][ln.key] = self.sim.t
+            self.waiting[sub][ln.key].append(ptup)
+            if ln.key not in self.in_flight[sub]:
+                self.pf_demand.inc()
+                self._io_enqueue(sub, _IOReq("read", ln.key, ln.ts),
+                                 front=True)
+            svc += IO_ISSUE * (1.0 + len(self.in_flight[sub]) / 32.0)
+        self._io_kick(sub)          # opportunistic write-back, per batch
+        return svc
 
     def periodic_evaluate(self) -> None:
         mgr = self.managers[0]
@@ -1650,6 +1870,18 @@ class Engine:
                 if lsk.count:
                     out[f"{name}_access_p50"] = lsk.quantile(0.50)
                     out[f"{name}_access_p99"] = lsk.quantile(0.99)
+                fp = [c for c in op.caches if isinstance(c, FusedPlane)]
+                if fp:
+                    # fused-plane rollup (§14): device tallies + batch
+                    # occupancy (underfilled batches waste launch cost)
+                    out[f"{name}_fused"] = {
+                        "batches": sum(c.batches for c in fp),
+                        "lanes": sum(c.lanes for c in fp),
+                        "fill_ratio": sum(c.lanes for c in fp) / max(
+                            1, sum(c.batches * c.batch for c in fp)),
+                        "device_hits": sum(c.device_hits for c in fp),
+                        "device_misses": sum(c.device_misses for c in fp),
+                    }
                 if op.shards is not None:
                     # per-shard routed-plane counters (DESIGN.md §9), not
                     # just the global totals above
@@ -1749,6 +1981,19 @@ class Engine:
                     ev[k] = ev.get(k, 0) + v
             for k, v in ev.items():
                 r.counter(f"{pre}.evict.{k}").set(v)
+            fp = [c for c in op.caches if isinstance(c, FusedPlane)]
+            if fp:
+                r.counter(f"{pre}.fused.batches").set(
+                    sum(c.batches for c in fp))
+                r.counter(f"{pre}.fused.lanes").set(
+                    sum(c.lanes for c in fp))
+                r.gauge(f"{pre}.fused.fill_ratio").set(
+                    sum(c.lanes for c in fp) / max(
+                        1, sum(c.batches * c.batch for c in fp)))
+                r.counter(f"{pre}.fused.device_hits").set(
+                    sum(c.device_hits for c in fp))
+                r.counter(f"{pre}.fused.device_misses").set(
+                    sum(c.device_misses for c in fp))
             if op.shards is not None:
                 op.shards.registry_sync(r, pre, op.shard_pending)
         r.counter("engine.net.data_bytes").set(int(data_bytes))

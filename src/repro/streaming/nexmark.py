@@ -196,7 +196,9 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 join_horizon: Optional[float] = None,
                 replayable: bool = False,
                 hint_filter: Optional[dict] = None,
-                compress_hints: bool = False) -> Engine:
+                compress_hints: bool = False,
+                fused: bool = False,
+                fused_batch: int = 64) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -229,13 +231,23 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     ``hint_filter`` is a HintFilter config dict applied to every
     lookahead (DESIGN.md §13; e.g. ``{"mode": "selective",
     "speculative": True}``); ``compress_hints`` accounts hint-channel
-    bytes under the delta codec."""
+    bytes under the delta codec.
+
+    ``fused=True`` runs the stateful operator's hot path as one jitted
+    device program per batch (DESIGN.md §14).  Only queries whose
+    aggregation is declarative — q5 (windowed count = sum of ones) and
+    q7 (windowed max bid) — compile; ``fused_batch`` sets the device
+    batch width B."""
+    if fused and query not in ("q5", "q7"):
+        raise ValueError(f"query {query!r} has no fused spec "
+                         "(fused mode covers q5/q7, DESIGN.md §14)")
     if query in ("q5", "q7"):
         return _build_windowed_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
             source_parallelism, io_workers, cms_conf, n_shards,
             buffer_timeout, hint_ts, window_size, window_slide,
-            allowed_lateness, replayable, hint_filter, compress_hints)
+            allowed_lateness, replayable, hint_filter, compress_hints,
+            fused, fused_batch)
     if query == "q8" or (query == "q20" and cfg.oo_bound > 0):
         return _build_join_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
@@ -421,7 +433,8 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
                           cms_conf, n_shards, buffer_timeout, hint_ts,
                           window_size, window_slide, allowed_lateness,
                           replayable=False, hint_filter=None,
-                          compress_hints=False):
+                          compress_hints=False, fused=False,
+                          fused_batch=64):
     """Event-time windowed NEXMark queries (DESIGN.md §10).
 
     q5 (hot items, simplified): bid count per auction per SLIDING window,
@@ -466,6 +479,26 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
         def emit_fn(key, wid, end, acc):
             return ("maxbid", key, acc) if acc is not None else None
 
+    fused_kw = {}
+    if fused:
+        # declarative device forms of the aggregations above (§14): the
+        # pane accumulator is an int in both queries, exact in f32 for
+        # counts < 2^24 and prices <= 10_000
+        from repro.streaming.fused import FusedSpec
+        if query == "q5":
+            spec = FusedSpec(
+                kind="sum", width=1,
+                weight_of=lambda tup: 1.0,
+                encode=lambda s: None if s is None else [float(s)],
+                decode=lambda v: int(round(float(v[0]))))
+        else:                             # q7: running max bid
+            spec = FusedSpec(
+                kind="max", width=1,
+                weight_of=lambda tup: float(tup.payload["price"]),
+                encode=lambda s: None if s is None else [float(s)],
+                decode=lambda v: int(round(float(v[0]))))
+        fused_kw = dict(fused=spec, fused_batch=fused_batch)
+
     assigner = WindowAssigner(size, slide)
     eng = _mk_engine()
     gen = NexmarkGen(cfg)
@@ -506,7 +539,7 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
         # arrival timestamps are recency, and ranking them as deadlines
         # would evict the hottest keys first
         miss_threshold=1.01, deadline_aware=(hint_ts == "deadline"),
-        shards=plane))
+        shards=plane, **fused_kw))
     sink = eng.add(SinkOp(eng, "sink", 1))
 
     from repro.streaming.engine import BUFFER_TIMEOUT

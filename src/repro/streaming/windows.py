@@ -31,8 +31,11 @@ from __future__ import annotations
 import math
 from typing import Any, Callable, Dict, List, Optional, Set
 
+import numpy as _np
+
 from repro.streaming.engine import HINT_COST, MapOp, StatefulOp, _IOReq
 from repro.streaming.events import Hint, Tuple_, WindowKey
+from repro.streaming.fused import Lane
 
 
 class _Fire:
@@ -237,6 +240,103 @@ class WindowedStatefulOp(StatefulOp):
         if not emitted:
             self._trace_absorbed(tup.trace)  # folded into the pane
         return self.service_time
+
+    # ------------------------------------------------------ fused data path
+    def _fused_prospect(self, sub: int, tup: Tuple_):
+        if isinstance(tup.key, WindowKey):
+            return (tup.key,), tup.payload is FIRE
+        return (tuple(WindowKey(tup.key, wid)
+                      for wid in self.assigner.assign(tup.ts)), False)
+
+    def _fused_expand(self, sub: int, tup: Tuple_, keys=None):
+        """Pane expansion for a fused batch, mirroring ``_on_data``: the
+        lateness-horizon and fired-window checks run here (device lanes
+        cannot re-check mid-batch; no watermark can interleave, so the
+        decision is the same one ``_apply`` would take).  FIRE lanes ride
+        as read-only lanes; tuples joining a fired window under the
+        update policy become late-update lanes (§14).  ``keys`` reuses
+        the prospect's WindowKeys so assignment runs once per tuple."""
+        spec = self.fused_spec
+        zeros = (0.0,) * spec.width
+        if isinstance(tup.key, WindowKey):
+            wk = tup.key
+            if tup.payload is FIRE:
+                return [Lane(wk, tup.ts, zeros, True, False, tup)]
+            # replayed / re-delivered pane access (migration replay is
+            # unreachable — fused excludes shards — but recovery
+            # re-delivery lands here): take the fired checks now
+            meta = self.windows[sub].get(wk.wid)
+            if meta is not None and meta["fired"]:
+                if self.late_policy != "update":
+                    self.late_dropped += 1
+                    self._trace_absorbed(tup.trace)
+                    return []
+                return [Lane(wk, tup.ts, spec.weight_raw(tup), False,
+                             True, tup)]
+            return [Lane(wk, tup.ts, spec.weight_raw(tup), False, False,
+                         tup)]
+        wm = self.wm[sub]
+        out = []
+        wks = keys if keys is not None \
+            else tuple(WindowKey(tup.key, wid)
+                       for wid in self.assigner.assign(tup.ts))
+        w_raw = None
+        for wk in wks:
+            wid = wk.wid
+            end = self.assigner.end(wid)
+            if end + self.allowed_lateness < wm:
+                self.late_dropped += 1          # beyond the horizon
+                continue
+            meta = self.windows[sub].get(wid)
+            if meta is not None and meta["fired"] \
+                    and self.late_policy == "drop":
+                self.late_dropped += 1          # fired, drop-policy
+                continue
+            if meta is None:
+                meta = {"keys": set(), "fired": False,
+                        "fired_keys": set()}
+                self.windows[sub][wid] = meta
+            meta["keys"].add(tup.key)
+            late = meta["fired"]
+            if late:
+                meta["fired_keys"].add(tup.key)
+            if w_raw is None:
+                w_raw = spec.weight_raw(tup)
+            out.append(Lane(wk, tup.ts, w_raw, False, late, tup))
+        if not out:
+            self._trace_absorbed(tup.trace)     # dropped before any pane
+        return out
+
+    def _fused_fire(self, sub: int, lane: Lane, state: Any) -> None:
+        """Device-hit FIRE lane: the pane value came back in the batch
+        read — emit exactly like ``_apply``'s FIRE branch.  (A fire lane
+        whose pane was evicted device-misses and parks/refetches through
+        the interpreted path instead.)"""
+        wk: WindowKey = lane.key
+        end = self.assigner.end(wk.wid)
+        payload = self.emit_fn(wk.base, wk.wid, end, state)
+        self.fires += 1
+        if payload is not None:
+            self.outputs += 1
+            self.emit(sub, Tuple_(end, wk.base, payload, self.out_size,
+                                  lane.tup.ingest_t, trace=lane.tup.trace))
+        if self.allowed_lateness == 0:
+            self._purge_pane(sub, wk)
+
+    def _fused_late(self, sub: int, lane: Lane, acc: Any) -> None:
+        """Device-hit late-update lane: the device already composed and
+        wrote the refreshed accumulator; re-emit it (§10 update policy)."""
+        wk: WindowKey = lane.key
+        tup = lane.tup
+        self.late_updates += 1
+        payload = self.emit_fn(wk.base, wk.wid, self.assigner.end(wk.wid),
+                               acc)
+        if payload is not None:
+            self.outputs += 1
+            self.emit(sub, Tuple_(tup.ts, wk.base, payload, self.out_size,
+                                  tup.ingest_t, trace=tup.trace))
+        else:
+            self._trace_absorbed(tup.trace)
 
     # ---------------------------------------------------------------- firing
     def on_watermark(self, sub: int, wm: float) -> None:

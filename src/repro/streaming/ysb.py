@@ -42,9 +42,14 @@ class YSBGen:
 def build_ysb(policy: str, mode: str, cfg: YSBConfig,
               cache_entries: int = 4096, parallelism: int = 3,
               source_parallelism: int = 2, io_workers: int = 8,
-              cms_conf=None, replayable: bool = False) -> Engine:
+              cms_conf=None, replayable: bool = False,
+              fused: bool = False, fused_batch: int = 64) -> Engine:
     """``replayable=True`` runs the source against a durable log so the
-    failure/recovery scenarios (DESIGN.md §7) can rewind and replay it."""
+    failure/recovery scenarios (DESIGN.md §7) can rewind and replay it.
+
+    ``fused=True`` runs the enrichment join's hot path on the device
+    plane (DESIGN.md §14): the campaign record is a 1-wide read-only row
+    and each batch probes + gathers + emits in one jitted program."""
     eng = Engine()
     gen = YSBGen(cfg)
     state_size = 64                        # campaign metadata
@@ -62,6 +67,18 @@ def build_ysb(policy: str, mode: str, cfg: YSBConfig,
         return state, [Tuple_(tup.ts, tup.key, (tup.payload, state), 130,
                               tup.ingest_t)]
 
+    fused_kw = {}
+    if fused:
+        from repro.streaming.fused import FusedSpec
+        spec = FusedSpec(
+            kind="read", width=1,
+            encode=lambda s: [float(s["campaign"])],
+            decode=lambda v: {"campaign": int(round(float(v[0])))},
+            emit_of=lambda tup, state: [
+                Tuple_(tup.ts, tup.key, (tup.payload, state), 130,
+                       tup.ingest_t)])
+        fused_kw = dict(fused=spec, fused_batch=fused_batch)
+
     src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate, gen,
                            replayable=replayable))
     parse = eng.add(MapOp(eng, "parser", parallelism, fn=vfilter,
@@ -75,7 +92,7 @@ def build_ysb(policy: str, mode: str, cfg: YSBConfig,
         cache_entries * state_size, policy=policy, mode=mode,
         io_workers=io_workers, state_size=state_size, read_only=True,
         default_state=lambda k: {"campaign": k % 1000},
-        dense_backend=True))
+        dense_backend=True, **fused_kw))
     sink = eng.add(SinkOp(eng, "sink", 1))
     eng.connect(src, parse)
     eng.connect(parse, proj)

@@ -1,0 +1,348 @@
+"""Differential parity: the fused device hot path vs the interpreted
+engine (DESIGN.md §14).
+
+The same tuple stream is driven through a fused and an interpreted
+operator under the QUIESCED protocol — deliver a data batch, run the
+simulator until all I/O lands, deliver a watermark, quiesce again.
+Batching compresses simulated time (that is the latency win), so under
+CONCURRENT async I/O backend completions land at different points of
+the event timeline and eviction-order counters may diverge; state and
+emitted tuples match regardless.  Quiescing pins the interleaving, and
+then EVERYTHING must match bit-exactly: final backend state, emitted
+tuples, and the §12 counter totals (hits/misses/evictions by reason,
+writebacks, late drops/updates, parked-tuple demand fetches).
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.streaming.backend import LOCAL_NVME
+from repro.streaming.engine import Engine, SinkOp, StatefulOp
+from repro.streaming.events import Tuple_, Watermark
+from repro.streaming.fused import FusedPlane, FusedSpec, Lane
+from repro.streaming.windows import WindowAssigner, WindowedStatefulOp
+
+
+def count_spec():
+    return FusedSpec(kind="sum", width=1,
+                     weight_of=lambda tup: 1.0,
+                     encode=lambda s: None if s is None else [float(s)],
+                     decode=lambda v: int(round(float(v[0]))))
+
+
+def max_spec():
+    return FusedSpec(kind="max", width=1,
+                     weight_of=lambda tup: float(tup.payload),
+                     encode=lambda s: None if s is None else [float(s)],
+                     decode=lambda v: int(round(float(v[0]))))
+
+
+class Collect(SinkOp):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.got = []
+
+    def process(self, sub, tup):
+        self.got.append((tup.ts, tup.key, tup.payload))
+        return super().process(sub, tup)
+
+
+def _counters(op):
+    cache = op.caches[0]
+    return dict(hits=cache.hits, misses=cache.misses,
+                evictions=cache.evictions, writebacks=cache.writebacks,
+                by_reason=cache.eviction_block(), processed=op.processed,
+                outputs=op.outputs, pf_demand=op.pf_demand.value)
+
+
+def _final_state(op, state_size):
+    for e in op.caches[0].flush_dirty():
+        op.backends[0].write(e.key, e.state, state_size)
+    return dict(op.backends[0].data)
+
+
+# ------------------------------------------------------------ base operator
+def run_base(keys, fused, cache_entries=8, batch=8):
+    """Count-per-key through a bare StatefulOp under the quiesced
+    protocol; returns (state, counters)."""
+    eng = Engine()
+    kw = dict(policy="tac", mode="async", cache_capacity=cache_entries * 64,
+              state_size=64, io_workers=2)
+    if fused:
+        kw["fused"] = count_spec()
+        kw["fused_batch"] = batch
+
+    def apply_count(tup, state):
+        return ((state or 0) + 1, [])
+
+    op = StatefulOp(eng, "agg", 1, apply_count, LOCAL_NVME, **kw)
+    eng.add(op)
+    t = 0.0
+    for i in range(0, len(keys), 6):
+        op.deliver_batch(0, [Tuple_(float(j), keys[j], None, 64, 0.0)
+                             for j in range(i, min(i + 6, len(keys)))])
+        t += 0.05
+        eng.sim.run_until(t)
+    eng.sim.run_until(t + 1.0)
+    return _final_state(op, 64), _counters(op)
+
+
+def assert_base_parity(keys):
+    si, ci = run_base(keys, fused=False)
+    sf, cf = run_base(keys, fused=True)
+    assert si == sf, f"state mismatch\ninterp={si}\nfused={sf}"
+    assert ci == cf, f"counter mismatch\ninterp={ci}\nfused={cf}"
+    return ci
+
+
+def test_base_parity_with_evictions_and_parking():
+    keys = [1, 2, 3, 1, 1, 4, 2, 9, 9, 1, 5, 6, 7, 8, 10, 11, 1, 2, 12, 1]
+    ci = assert_base_parity(keys)
+    # the workload must actually exercise the cold paths it claims to
+    assert ci["evictions"] > 0
+    assert ci["pf_demand"] > 0          # misses parked + demand-fetched
+
+
+def test_base_parity_single_hot_key():
+    # duplicate keys in one batch: the device composes the run in-lane
+    assert_base_parity([7] * 23)
+
+
+def test_base_parity_all_distinct():
+    assert_base_parity(list(range(30)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=12),
+                min_size=1, max_size=48))
+def test_base_parity_property(keys):
+    assert_base_parity(keys)
+
+
+# -------------------------------------------------------- windowed operator
+def run_windowed(keys_ts, fused, lateness, late_policy, size=10.0,
+                 cache_entries=6, batch=8, wm_lag=6.0, spec=None,
+                 agg=None, emit=None, payload_of=None):
+    """Windowed count per (key, window) with a mid-stream watermark after
+    every quiesced data batch; returns (emits, state, counters)."""
+    eng = Engine()
+    kw = dict(policy="tac", mode="async", cache_capacity=cache_entries * 64,
+              state_size=64, io_workers=2, allowed_lateness=lateness,
+              late_policy=late_policy)
+    if fused:
+        kw["fused"] = spec or count_spec()
+        kw["fused_batch"] = batch
+    if agg is None:
+        def agg(tup, state):
+            return (state or 0) + 1
+
+        def emit(base, wid, end, acc):
+            return ("count", base, acc) if acc else None
+    op = WindowedStatefulOp(eng, "win", 1, WindowAssigner(size), agg, emit,
+                            LOCAL_NVME, **kw)
+    sink = Collect(eng, "sink", 1)
+    eng.add(op)
+    eng.add(sink)
+    eng.connect(op, sink)
+    batches = []                         # the fence-invariant check below
+    if fused:
+        plane = op.caches[0]
+        orig = plane.batch_step
+
+        def recording(lanes):
+            batches.append(list(lanes))
+            return orig(lanes)
+        plane.batch_step = recording
+    t = 0.0
+    hi = 0.0
+    for i in range(0, len(keys_ts), 6):
+        chunk = keys_ts[i:i + 6]
+        op.deliver_batch(0, [
+            Tuple_(ts, k, payload_of(k, ts) if payload_of else None,
+                   64, 0.0) for k, ts in chunk])
+        hi = max([hi] + [ts for _, ts in chunk])
+        t += 0.05
+        eng.sim.run_until(t)             # quiesce: all I/O lands
+        op.deliver_batch(0, [Watermark(hi - wm_lag)])
+        t += 0.05
+        eng.sim.run_until(t)
+    op.deliver_batch(0, [Watermark(hi + 1000.0)])
+    eng.sim.run_until(t + 2.0)
+    for lanes in batches:
+        fires = {ln.key for ln in lanes if ln.fire}
+        upds = {ln.key for ln in lanes if not ln.fire}
+        assert not (fires & upds), \
+            "fire and update of the same pane shared a device batch"
+    ctr = _counters(op)
+    ctr.update(fires=op.fires, late_dropped=op.late_dropped,
+               late_updates=op.late_updates, purged=op.panes_purged)
+    return sorted(sink.got), _final_state(op, 64), ctr
+
+
+def assert_windowed_parity(keys_ts, lateness, late_policy, **kw):
+    gi, si, ci = run_windowed(keys_ts, False, lateness, late_policy, **kw)
+    gf, sf, cf = run_windowed(keys_ts, True, lateness, late_policy, **kw)
+    assert gi == gf, f"emit mismatch\ninterp={gi}\nfused={gf}"
+    assert si == sf, f"state mismatch\ninterp={si}\nfused={sf}"
+    assert ci == cf, f"counter mismatch\ninterp={ci}\nfused={cf}"
+    return ci
+
+
+def _steady_stream():
+    keys = [1, 2, 3, 1, 1, 4, 2, 9, 9, 1, 5, 6, 7, 8, 10, 11, 1, 2, 12, 1,
+            3, 3, 5, 1, 2, 7, 9, 4, 4, 1]
+    return [(k, i * 1.7) for i, k in enumerate(keys)]
+
+
+def test_windowed_parity_no_lateness():
+    ci = assert_windowed_parity(_steady_stream(), 0.0, "drop")
+    assert ci["fires"] > 0               # mid-stream watermarks fired panes
+    assert ci["evictions"] > 0
+
+
+def test_windowed_parity_update_policy_with_late_tuples():
+    # watermark trails by 6s; tuples jumping 30s back are LATE on fired
+    # panes (within the 40s horizon -> late-side re-aggregation)
+    stream = _steady_stream()
+    late = [(1, 3.0), (2, 5.0), (1, 12.0), (9, 14.0)]
+    keys_ts = stream[:18] + late + stream[18:]
+    ci = assert_windowed_parity(keys_ts, 40.0, "update")
+    assert ci["late_updates"] > 0
+
+
+def test_windowed_parity_drop_policy_drops_late():
+    stream = _steady_stream()
+    late = [(1, 3.0), (2, 5.0), (1, 0.5)]
+    keys_ts = stream[:18] + late + stream[18:]
+    ci = assert_windowed_parity(keys_ts, 40.0, "drop")
+    assert ci["late_dropped"] > 0
+
+
+def test_windowed_parity_horizon_drop():
+    # beyond watermark - lateness: dropped in BOTH policies
+    stream = _steady_stream()
+    keys_ts = stream + [(5, 0.1), (6, 0.2)]
+    ci = assert_windowed_parity(keys_ts, 0.0, "drop")
+    assert ci["late_dropped"] >= 2
+
+
+def test_windowed_parity_max_kind():
+    stream = [(k, i * 1.7) for i, k in enumerate(
+        [1, 2, 1, 3, 1, 2, 4, 1, 5, 2, 1, 3, 6, 1, 2, 7, 1, 1])]
+
+    def agg(tup, state):
+        p = tup.payload
+        return p if state is None or p > state else state
+
+    def emit(base, wid, end, acc):
+        return ("max", base, acc) if acc is not None else None
+
+    # payload must be a pure function of (k, ts): both runs see it
+    assert_windowed_parity(
+        stream, 0.0, "drop", spec=max_spec(), agg=agg, emit=emit,
+        payload_of=lambda k, ts: (k * 7919 + int(ts * 10)) % 9973 + 1)
+
+
+if HAVE_HYPOTHESIS:
+    _streams = st.lists(
+        st.tuples(st.integers(min_value=0, max_value=9),
+                  st.floats(min_value=0.0, max_value=60.0, width=16,
+                            allow_nan=False)),
+        min_size=1, max_size=36)
+
+    @settings(max_examples=10, deadline=None)
+    @given(_streams, st.sampled_from([(0.0, "drop"), (25.0, "update"),
+                                      (25.0, "drop")]))
+    def test_windowed_parity_property(keys_ts, pol):
+        lateness, policy = pol
+        assert_windowed_parity(keys_ts, lateness, policy)
+
+
+# -------------------------------------------------------------- unit layer
+def test_fused_requires_tac_policy():
+    eng = Engine()
+    with pytest.raises(ValueError):
+        StatefulOp(eng, "x", 1, lambda t, s: (s, []), LOCAL_NVME,
+                   cache_capacity=64, policy="lru", mode="async",
+                   fused=count_spec())
+
+
+def test_fused_forbids_shards():
+    from repro.streaming.shards import ShardPlane
+    eng = Engine()
+    with pytest.raises(ValueError):
+        StatefulOp(eng, "x", 1, lambda t, s: (s, []), LOCAL_NVME,
+                   cache_capacity=64, policy="tac", mode="async",
+                   fused=count_spec(), shards=ShardPlane(2, 1))
+
+
+def test_fused_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FusedSpec(kind="median")
+
+
+def test_fusedplane_single_key_ops():
+    plane = FusedPlane(4 * 8, 8, count_spec(), batch=4)
+    assert plane.lookup("a", 1.0) is None        # miss
+    plane.insert("a", 3, 1.0, dirty=True)
+    assert plane.lookup("a", 2.0) == 3
+    plane.write("a", 5, 3.0)
+    assert plane.lookup("a", 3.0) == 5
+    assert plane.contains("a")
+    assert len(plane) == 1
+    assert plane.drop("a")
+    assert not plane.contains("a")
+    assert plane.hits == 2 and plane.misses == 1
+
+
+def test_fusedplane_eviction_and_writeback():
+    plane = FusedPlane(2 * 8, 8, count_spec(), batch=4)
+    plane.insert("a", 1, 1.0, dirty=True)
+    plane.insert("b", 2, 2.0, dirty=True)
+    plane.insert("c", 3, 3.0, dirty=True)       # evicts "a" (min ts)
+    assert plane.evictions == 1
+    assert plane.eviction_block() == {"capacity.demand": 1}
+    assert "a" in plane.evict_buffer            # dirty victim staged
+    assert plane.lookup("a", 4.0) == 1          # restore from the buffer
+    assert plane.evictions == 2                 # ...which evicted again
+    wb = plane.pop_writeback()
+    assert wb is not None and plane.writebacks == 1
+
+
+def test_fusedplane_batch_step_composes_duplicates():
+    import numpy as np
+    spec = count_spec()
+    plane = FusedPlane(4 * 8, 8, spec, batch=8)
+    plane.insert("k", 10, 1.0, dirty=False)
+    lanes = [Lane("k", 2.0, spec.weight(None), False, False, None)
+             for _ in range(3)]
+    res = plane.batch_step(lanes)
+    assert res.hit.all()
+    # prefix composition: lane i sees the value AFTER its own update
+    assert [plane.decode_lane(res, i) for i in range(3)] == [11, 12, 13]
+    assert plane.lookup("k", 3.0) == 13
+    assert plane.device_hits == 3 and plane.lanes == 3
+    assert 0.0 < plane.fill_ratio <= 1.0
+    miss = plane.batch_step(
+        [Lane("nope", 4.0, spec.weight(None), False, False, None)])
+    assert not miss.hit.any() and plane.device_misses == 1
+    assert isinstance(res.new_vals, np.ndarray)
+
+
+def test_fusedplane_flush_and_export_roundtrip():
+    plane = FusedPlane(4 * 8, 8, count_spec(), batch=4)
+    plane.insert("a", 1, 1.0, dirty=True)
+    plane.insert("b", 2, 2.0, dirty=False)
+    dirty = plane.flush_dirty()
+    assert [e.key for e in dirty] == ["a"]
+    ents = plane.export_entries(lambda k: True)
+    assert {e.key for e in ents} == {"a", "b"}
+    assert len(plane) == 0
+    plane.import_entries(ents)
+    assert plane.lookup("a", 5.0) == 1 and plane.lookup("b", 5.0) == 2

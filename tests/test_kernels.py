@@ -179,3 +179,65 @@ def test_rwkv6_scan(S, N, chunk, dtype):
     rel = float(jnp.max(jnp.abs(out.astype(jnp.float32)
                                 - ref.astype(jnp.float32)))) / scale
     assert rel < (5e-2 if dtype == jnp.bfloat16 else 1e-4), rel
+
+
+@pytest.mark.parametrize("kind", ["sum", "max", "read"])
+def test_fused_step_composition(kind):
+    """fused_step = tac_probe_gather ∘ operator compute ∘ page_scatter in
+    one program; duplicate keys must compose exactly as a sequential
+    per-lane loop (DESIGN.md §14)."""
+    from repro.core import tac_jax
+    W, V, B = 8, 2, 6
+    state = tac_jax.init(1, W, 1)
+    pages = jnp.zeros((W + 1, 1, V + 1), jnp.float32)
+    # admit keys 0..3 at slots 0..3 with seed values
+    seed = np.arange(1, 4 * V + 1, dtype=np.float32).reshape(4, V)
+    state, pages, _ = tac_jax.fused_admit(
+        state, pages, jnp.arange(4, dtype=jnp.int32),
+        jnp.arange(4, dtype=jnp.int32),
+        jnp.zeros(4, jnp.float32), jnp.asarray(seed),
+        jnp.ones(4, bool), jnp.zeros(4, bool))
+    # batch: dup key 1 (composes), key 2 fire (reads only), key 7 miss,
+    # one padding lane
+    keys = jnp.asarray([1, 1, 2, 7, 1, -2], jnp.int32)
+    ts = jnp.full(B, 5.0, jnp.float32)
+    wts = jnp.asarray(
+        np.arange(1, B * V + 1, dtype=np.float32).reshape(B, V))
+    fire = jnp.asarray([0, 0, 1, 0, 0, 0], bool)
+    valid = jnp.asarray([1, 1, 1, 1, 1, 0], bool)
+    out = tac_jax.fused_step(state, pages, keys, ts, wts, fire, valid,
+                             kind=kind)
+    hit = np.asarray(out.hit)
+    assert hit.tolist() == [True, True, True, False, True, False]
+    assert np.asarray(out.tallies).tolist() == [4, 1]
+    # sequential reference over the same lanes
+    vals = {k: seed[k].copy() for k in range(4)}
+    ref = []
+    for i in range(B):
+        k = int(keys[i])
+        if not hit[i]:
+            ref.append(np.zeros(V, np.float32))
+            continue
+        if kind != "read" and not bool(fire[i]):
+            w = np.asarray(wts[i])
+            vals[k] = np.maximum(vals[k], w) if kind == "max" \
+                else vals[k] + w
+        ref.append(vals[k].copy())
+    np.testing.assert_allclose(np.asarray(out.new_vals), np.stack(ref),
+                               rtol=1e-6)
+    # pool holds the final composed value; scratch row stays absent
+    pool = np.asarray(out.pages)
+    expect = seed[1] if kind == "read" else vals[1]
+    np.testing.assert_allclose(pool[1, 0, 1:], expect, rtol=1e-6)
+    assert pool[-1].sum() == 0.0
+    # fire lane never dirties; update lanes do (except read kind)
+    dirty = np.asarray(out.state.dirty)[0]
+    assert not dirty[2]
+    assert bool(dirty[1]) == (kind != "read")
+    # drop then re-probe: membership cleared, pool row stale-but-dead
+    st2 = tac_jax.drop_slots(out.state, jnp.asarray([1, 0], jnp.int32),
+                             jnp.asarray([True, False], bool))
+    out2 = tac_jax.fused_step(st2, out.pages, keys, ts, wts, fire, valid,
+                              kind=kind)
+    assert np.asarray(out2.hit).tolist() == [False, False, True, False,
+                                             False, False]

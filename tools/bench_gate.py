@@ -27,7 +27,17 @@ its headline advantage on the (smoke) config it was run with:
     and on the distribution-sensitive queries (q5, q20) its wasted-hint
     ratio must be strictly lower (q8's join keys are drawn uniformly
     regardless of ``key_dist``, so it is a structural control — p99
-    bound only; ISSUE 7 acceptance).
+    bound only; ISSUE 7 acceptance);
+  * engine (``BENCH_engine*.json``): for every query present, the
+    fused data path must beat the interpreted one —
+    ``headline.speedup_fused_vs_interpreted`` (fused hot-path capacity
+    over interpreted engine tuples/sec, see benchmarks/engine.py) must
+    be >= 1, the through-engine pump must hold a parity band (fused >=
+    ``PUMP_BAND`` x interpreted: the sim's single-threaded control
+    plane serializes with per-batch device dispatch that a deployment
+    overlaps, so exact parity is machine-dependent; the band is a
+    regression tripwire), and fused full-run p99 must be <= 1.1x
+    interpreted (ISSUE 8 acceptance).
 
 Stdlib only:  ``python tools/bench_gate.py BENCH_serving.json ...``
 """
@@ -162,6 +172,48 @@ def gate_obs(data: dict, fails: list, name: str) -> None:
                      f"recall={rec})")
 
 
+# pump parity band (gate_engine): the fused pump shares the sim's
+# serialized per-tuple control plane AND pays per-batch device
+# dispatch with zero overlap, so it sits below interpreted by a
+# machine-dependent margin; the capacity claim lives in the headline
+PUMP_BAND = 0.5
+
+
+def gate_engine(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        h = data[q].get("headline")
+        if not h:
+            fails.append(f"{name}: {q} missing headline block")
+            continue
+        sp = h.get("speedup_fused_vs_interpreted", 0.0)
+        ok = sp >= 1.0
+        print(f"  engine {q}: fused hot path x{sp:.2f} interpreted "
+              f"(floor 1.0) -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} fused hot path x{sp:.2f} "
+                         f"interpreted (< 1.0)")
+        pr = h.get("pump_ratio_fused_vs_interpreted", 0.0)
+        ok = pr >= PUMP_BAND
+        print(f"  engine {q}: fused pump x{pr:.2f} interpreted "
+              f"(band {PUMP_BAND}) -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} fused pump x{pr:.2f} interpreted "
+                         f"(< {PUMP_BAND})")
+        p99 = h.get("p99_ratio_fused_vs_interpreted")
+        if p99 is None:
+            fails.append(f"{name}: {q} missing p99 ratio")
+            continue
+        ok = p99 <= 1.1
+        print(f"  engine {q}: fused full-run p99 x{p99:.3f} interpreted "
+              f"(ceiling 1.1) -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} fused full-run p99 x{p99:.3f} "
+                         f"interpreted (> 1.1)")
+
+
 # the queries whose key distribution actually follows ``key_dist`` —
 # q8 joins persons x auctions on uniformly drawn ids, so selective
 # admission cannot (and need not) cut its waste under zipf
@@ -230,6 +282,8 @@ def main(argv) -> int:
             gate_obs(data, fails, name)
         elif "hints" in name:
             gate_hints(data, fails, name)
+        elif "engine" in name:
+            gate_engine(data, fails, name)
         else:
             fails.append(f"{name}: no gate rule for this artifact")
     if fails:

@@ -76,6 +76,21 @@ def print_quality(hq: dict, evictions: dict) -> None:
             print(f"  {k:<24s} {evictions[k]:>8d}")
 
 
+def print_fused(fb: dict) -> None:
+    """Fused hot-path rollup (DESIGN.md §14): batch-fill is the one to
+    watch — underfilled batches waste launch cost (fences and drain
+    stalls fragment them)."""
+    if not fb:
+        return
+    print("\nfused hot path:")
+    print(f"  {'batches':<16s} {fb.get('batches', 0):>8d}")
+    print(f"  {'lanes':<16s} {fb.get('lanes', 0):>8d}")
+    print(f"  {'batch-fill':<16s} {fb.get('fill_ratio', 0.0):>8.3f}   "
+          f"(lanes / batches x width)")
+    print(f"  {'device hits':<16s} {fb.get('device_hits', 0):>8d}")
+    print(f"  {'device misses':<16s} {fb.get('device_misses', 0):>8d}")
+
+
 def run_report(args) -> int:
     from repro.streaming.backend import LOCAL_NVME
     from repro.streaming.nexmark import NexmarkConfig, build_query
@@ -86,7 +101,8 @@ def run_report(args) -> int:
                       cache_entries=256, backend=LOCAL_NVME,
                       parallelism=2, source_parallelism=1, io_workers=4,
                       buffer_timeout=0.002, hint_ts="deadline",
-                      window_size=1.0, window_slide=0.5)
+                      window_size=1.0, window_slide=0.5,
+                      fused=args.fused)
     eng.enable_tracing(sample_every=args.sample_every)
     if args.export:
         eng.enable_export(args.export, interval=0.5)
@@ -100,6 +116,7 @@ def run_report(args) -> int:
     print_stage_table(m.get("trace", {}))
     print_quality(m.get("stateful_hint_quality", {}),
                   m.get("stateful_evictions", {}))
+    print_fused(m.get("stateful_fused", {}))
     if args.export:
         print(f"\nregistry snapshots appended to {args.export}")
     return 0
@@ -145,6 +162,9 @@ def main() -> int:
     ap.add_argument("--warmup", type=float, default=1.5)
     ap.add_argument("--sample-every", type=int, default=16)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--fused", action="store_true",
+                    help="run the q5 smoke pipeline on the fused device "
+                         "hot path and report its batch-fill ratio")
     ap.add_argument("--export", metavar="FILE.jsonl",
                     help="also append registry snapshots during the run")
     args = ap.parse_args()
