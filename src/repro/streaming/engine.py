@@ -115,6 +115,12 @@ class Channel:
         # operating on raw sizes, so enabling the codec never perturbs
         # latency semantics — bytes_sent vs bytes_raw shows the saving.
         self.codec = codec
+        # chaos hook (streaming/chaos.py, DESIGN.md §15): a fault
+        # schedule may attach a ChannelChaos here to drop hints at send
+        # time or stretch flush delays.  None (the default) keeps the
+        # hot path to one attribute check; the FIFO arrival clamp below
+        # makes any added delay ordering-safe.
+        self.chaos = None
         self.bufs: Dict[Tuple[int, int], List] = defaultdict(list)
         self.buf_bytes: Dict[Tuple[int, int], int] = defaultdict(int)
         self.flush_scheduled: Dict[Tuple[int, int], bool] = defaultdict(bool)
@@ -152,6 +158,9 @@ class Channel:
                     Watermark(msg.ts, origin=(self.chan_id, src_sub)))
                 self._flush(src_sub, d)
             return
+        if self.chaos is not None and isinstance(msg, Hint) \
+                and self.chaos.drop(msg):
+            return                        # hint lost in transit (§15)
         key = getattr(msg, "key", None)
         d = self.partition(key, self.dst.parallelism)
         slot = (src_sub, d)
@@ -180,6 +189,8 @@ class Channel:
         self.bytes_sent += self._wire_bytes(batch, raw)
         self.msgs_sent += len(batch)
         delay = NET_LATENCY + NET_PER_MSG * len(batch)
+        if self.chaos is not None:
+            delay += self.chaos.delay()
         # the per-message term makes a small batch faster than a LARGE
         # batch flushed just before it; a TCP-like channel never reorders,
         # so clamp arrival to per-(src,dst)-pair FIFO — watermarks and
@@ -574,6 +585,13 @@ class SourceOp(Operator):
         self.rate = rate
         self.gen = gen
         self.stopped = False
+        # load-shift knob (streaming/chaos.py, DESIGN.md §15): scales the
+        # WALL-CLOCK tick pacing only.  The logical clock still advances
+        # one ``interval`` per record, so the record sequence — and with
+        # it the durable log and every event timestamp — is identical at
+        # any rate_scale; a load shift changes when records ARRIVE, never
+        # what they say.
+        self.rate_scale = 1.0
         self.watermark_interval = watermark_interval
         self.oo_bound = oo_bound
         self._max_ts = [float("-inf")] * parallelism
@@ -636,13 +654,14 @@ class SourceOp(Operator):
                 self.log[sub].append((lt, rec))
                 self.replay_pos[sub] = end + 1
                 self._emit_rec(sub, lt, rec)
-            self.sim.after(interval, self._tick, sub, interval)
+            self.sim.after(interval / self.rate_scale, self._tick, sub,
+                           interval)
             return
         now = self.sim.t
         rec = self.gen(now)
         if rec is not None:
             self._emit_rec(sub, now, rec)
-        self.sim.after(interval, self._tick, sub, interval)
+        self.sim.after(interval / self.rate_scale, self._tick, sub, interval)
 
     def _wm_tick(self, sub: int) -> None:
         if self.stopped:

@@ -24,9 +24,10 @@ expiry, and two-sided hints.
 from __future__ import annotations
 
 import itertools
-import random
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.streaming.backend import (DISAGGREGATED, LOCAL_NVME, BackendModel,
                                      StateBackend)
@@ -80,7 +81,11 @@ class NexmarkGen:
 
     def __init__(self, cfg: NexmarkConfig):
         self.cfg = cfg
-        self.rng = random.Random(cfg.seed)
+        # one counter-based numpy Generator per workload: every draw is a
+        # pure function of (seed, draw index), so a run replays bit-exactly
+        # from its seed — the determinism contract the chaos oracle's
+        # golden-vs-perturbed comparison rests on (DESIGN.md §15)
+        self.rng = np.random.Generator(np.random.PCG64(cfg.seed))
         self.n = 0
         self.recent_pairs = []
         # bid wars belong to the default workload; the synthetic
@@ -100,9 +105,9 @@ class NexmarkGen:
             if self.rng.random() < self.cfg.hot_auction_prob:
                 # most popular auction changes once per second (paper §VI-d)
                 return min(hi - 1, int(int(now) * self.cfg.auctions_per_s))
-            return self.rng.randint(lo, max(lo, hi - 1))
+            return int(self.rng.integers(lo, max(lo, hi - 1) + 1))
         if dist == "uniform":
-            return self.rng.randint(lo, max(lo, hi - 1))
+            return int(self.rng.integers(lo, max(lo, hi - 1) + 1))
         # zipf / shift: rank ~ Zipf(1) over the active range via the
         # log-uniform trick (rank = n**u - 1 puts prob ~1/(rank+1) mass
         # on each rank); zipf_s > 1 sharpens the head
@@ -123,7 +128,7 @@ class NexmarkGen:
         lo, hi = self.active_range(now, per_s)
         if self.rng.random() < self.cfg.hot_bidder_prob:
             return min(hi - 1, int(int(now) * per_s))
-        return self.rng.randint(lo, max(lo, hi - 1))
+        return int(self.rng.integers(lo, max(lo, hi - 1) + 1))
 
     def _event_ts(self, now: float) -> float:
         """Bounded-out-of-orderness event time (only when cfg.oo_bound>0):
@@ -148,27 +153,28 @@ class NexmarkGen:
         if r < 0.92:
             if self.recent_pairs and self.rng.random() < self.repeat_pair_prob:
                 a, b = self.recent_pairs[
-                    self.rng.randrange(len(self.recent_pairs))]
+                    int(self.rng.integers(len(self.recent_pairs)))]
             else:
                 a = self._auction_id(now)
                 b = self._bidder_id(now)
                 self.recent_pairs.append((a, b))
                 if len(self.recent_pairs) > 4096:
                     del self.recent_pairs[:2048]
-            price = self.rng.randint(1, 10_000)
+            price = int(self.rng.integers(1, 10_001))
             return (a, {"type": BID, "auction": a, "bidder": b,
                         "price": price}, SIZES[BID])
         if r < 0.98:
             lo, hi = self.active_range(now, self.cfg.auctions_per_s)
             aid = hi                          # a new auction opens
-            cat = 10 if self.rng.random() < 0.25 else self.rng.randrange(10)
+            cat = 10 if self.rng.random() < 0.25 \
+                else int(self.rng.integers(10))
             plo, phi = self.active_range(now, max(0.02 * self.cfg.rate, 1.0))
-            seller = self.rng.randint(plo, max(plo, phi - 1))
+            seller = int(self.rng.integers(plo, max(plo, phi - 1) + 1))
             return (aid, {"type": AUCTION, "auction": aid, "category": cat,
                           "seller": seller}, SIZES[AUCTION])
         lo, hi = self.active_range(now, max(0.02 * self.cfg.rate, 1.0))
         return (hi, {"type": PERSON, "person": hi,
-                     "state": self.rng.randrange(50)}, SIZES[PERSON])
+                     "state": int(self.rng.integers(50))}, SIZES[PERSON])
 
 
 # --------------------------------------------------------------------- plans
@@ -198,7 +204,8 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
                 hint_filter: Optional[dict] = None,
                 compress_hints: bool = False,
                 fused: bool = False,
-                fused_batch: int = 64) -> Engine:
+                fused_batch: int = 64,
+                session_gap: Optional[float] = None) -> Engine:
     """policy: lru|clock|tac; mode: sync|async|prefetch.
 
     With ``n_shards`` the stateful operator runs the sharded state plane
@@ -222,6 +229,12 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
     hints, "one" = probe side only, the ablation) and, for the interval
     join, ``join_horizon`` (how long an auction accepts bids; defaults
     to ``cfg.active_window``).
+
+    q11 (per-bidder activity sessions, DESIGN.md §15) counts bids per
+    SESSION window: ``session_gap`` sets the inactivity gap (default
+    0.5 s), panes merge on bridging bids, and deadline hints MOVE as
+    sessions extend.  ``allowed_lateness`` defaults to ``cfg.oo_bound``
+    with the ``update`` late policy (Aion-style re-open).
 
     ``replayable=True`` puts a durable log in front of the source
     (DESIGN.md §7): the generator runs on a logical clock and records are
@@ -248,6 +261,12 @@ def build_query(query: str, policy: str, mode: str, cfg: NexmarkConfig,
             buffer_timeout, hint_ts, window_size, window_slide,
             allowed_lateness, replayable, hint_filter, compress_hints,
             fused, fused_batch)
+    if query == "q11":
+        return _build_session_query(
+            query, policy, mode, cfg, cache_entries, backend, parallelism,
+            source_parallelism, io_workers, cms_conf, n_shards,
+            buffer_timeout, hint_ts, session_gap, allowed_lateness,
+            replayable, hint_filter, compress_hints)
     if query == "q8" or (query == "q20" and cfg.oo_bound > 0):
         return _build_join_query(
             query, policy, mode, cfg, cache_entries, backend, parallelism,
@@ -555,6 +574,106 @@ def _build_windowed_query(query, policy, mode, cfg, cache_entries, backend,
     eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
     if mode == "prefetch":
         eng.register_prefetching(stateful, [winla],
+                                 compress_hints=compress_hints)
+    return eng
+
+
+def _build_session_query(query, policy, mode, cfg, cache_entries, backend,
+                         parallelism, source_parallelism, io_workers,
+                         cms_conf, n_shards, buffer_timeout, hint_ts,
+                         session_gap, allowed_lateness, replayable=False,
+                         hint_filter=None, compress_hints=False):
+    """NEXMark q11 (simplified): per-BIDDER activity sessions — bid count
+    per session, a session closing after ``session_gap`` of inactivity
+    (DESIGN.md §15).
+
+    The only window type whose fire deadline is data-driven: every bid
+    extends its session's end and a bridging bid MERGES two sessions, so
+    the lookahead re-hints moving deadlines and the TAC renews resident
+    panes in place.  The parser rekeys bids to the bidder BEFORE the
+    keyed exchange into the lookahead, so the lookahead and the stateful
+    operator partition by the same key and see each bidder's bids in one
+    FIFO order — the lockstep their mirrored session registries need.
+    """
+    import itertools as _it
+
+    from repro.streaming.sessions import (SessionLookaheadOp,
+                                          SessionWindowAssigner,
+                                          SessionWindowedOp)
+
+    if cfg.oo_bound <= 0:
+        raise ValueError("session query needs cfg.oo_bound > 0 "
+                         "(event-time watermarks drive session firing)")
+    gap = 0.5 if session_gap is None else float(session_gap)
+    lateness = cfg.oo_bound if allowed_lateness is None \
+        else float(allowed_lateness)
+    late_policy = "update" if lateness > 0 else "drop"
+    state_size = 96                       # a counter + pane metadata
+
+    assigner = SessionWindowAssigner(gap)
+    eng = _mk_engine()
+    gen = NexmarkGen(cfg)
+
+    def bid_rekey(tup: Tuple_):
+        p = tup.payload
+        if p["type"] != BID:
+            return None
+        tup.key = p["bidder"]
+        return tup
+
+    def key_of(tup: Tuple_):
+        p = tup.payload
+        return p["bidder"] if p["type"] == BID else None
+
+    def agg_fn(tup, acc):
+        return (acc or 0) + 1
+
+    def merge_fn(a, b):
+        return (a or 0) + (b or 0)
+
+    def emit_fn(key, wid, end, acc):
+        # the session id (canonical: derived from the session's earliest
+        # bid) rides along so downstream — and the chaos oracle — can
+        # identify WHICH session a count belongs to
+        return ("session", key, wid, acc) if acc else None
+
+    src = eng.add(SourceOp(eng, "source", source_parallelism, cfg.rate,
+                           gen, watermark_interval=cfg.watermark_interval,
+                           oo_bound=cfg.oo_bound, replayable=replayable))
+    parse = eng.add(MapOp(eng, "parser", parallelism, fn=bid_rekey,
+                          service_time=15e-6))
+    sessla = eng.add(SessionLookaheadOp(
+        eng, "sess_lookahead", parallelism, assigner, key_of,
+        hint_ts_mode=hint_ts, burst_ahead=2 * cfg.watermark_interval,
+        allowed_lateness=lateness, service_time=10e-6, cms_conf=cms_conf,
+        filter_conf=hint_filter))
+    plane = None
+    if n_shards is not None:
+        from repro.streaming.shards import ShardPlane
+        plane = ShardPlane(n_shards, parallelism)
+    stateful = eng.add(SessionWindowedOp(
+        eng, "stateful", parallelism, assigner, agg_fn, emit_fn, backend,
+        cache_entries * state_size, merge_fn=merge_fn,
+        allowed_lateness=lateness, late_policy=late_policy, policy=policy,
+        mode=mode, io_workers=io_workers, state_size=state_size,
+        miss_threshold=1.01, deadline_aware=(hint_ts == "deadline"),
+        shards=plane))
+    sink = eng.add(SinkOp(eng, "sink", 1))
+
+    from repro.streaming.engine import BUFFER_TIMEOUT
+    to = BUFFER_TIMEOUT if buffer_timeout is None else buffer_timeout
+    rr = _it.count()
+    eng.connect(src, parse, partition=lambda k, n: next(rr) % n, timeout=to)
+    # parse -> lookahead is KEYED (unlike the fixed-window plans): the
+    # session registry is per key, so the lookahead must see each
+    # bidder's full, ordered bid stream
+    eng.connect(parse, sessla, timeout=to)
+    eng.connect(sessla, stateful,
+                partition=plane.route_data if plane else hash_partition,
+                timeout=to)
+    eng.connect(stateful, sink, partition=lambda k, n: 0, timeout=to)
+    if mode == "prefetch":
+        eng.register_prefetching(stateful, [sessla],
                                  compress_hints=compress_hints)
     return eng
 

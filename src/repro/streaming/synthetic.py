@@ -8,8 +8,9 @@ latest candidate with sufficient slack).
 """
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.engine import (Engine, MapOp, SinkOp, SourceOp,
@@ -40,10 +41,12 @@ def build_synthetic(cfg: SyntheticConfig, policy: str = "tac",
                     parallelism: int = 2, gamma: float = 0.3e-3,
                     lookaheads=("udf0", "udf1", "udf2")) -> Engine:
     eng = Engine()
-    rng = random.Random(cfg.seed)
+    # counter-based generator: the workload replays bit-exactly from its
+    # seed (the chaos oracle's determinism contract, DESIGN.md §15)
+    rng = np.random.Generator(np.random.PCG64(cfg.seed))
 
     def gen(now: float):
-        k = rng.randint(0, cfg.n_keys - 1)
+        k = int(rng.integers(cfg.n_keys))
         if cfg.oo_bound > 0:
             return (k, {"k": k}, 150,
                     max(0.0, now - cfg.oo_bound * rng.random()))

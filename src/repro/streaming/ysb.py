@@ -3,7 +3,6 @@ DISAGGREGATED key-value store (the paper uses remote Redis).  Events are
 114 B; ad ids follow Zipf(alpha=1); the join key is ad_id -> campaign."""
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass
 
 import numpy as np
@@ -25,7 +24,9 @@ class YSBConfig:
 class YSBGen:
     def __init__(self, cfg: YSBConfig):
         self.cfg = cfg
-        self.rng = random.Random(cfg.seed)
+        # counter-based generator: replays bit-exactly from the seed
+        # (chaos-oracle determinism contract, DESIGN.md §15)
+        self.rng = np.random.Generator(np.random.PCG64(cfg.seed))
         # Zipf(alpha=1) over n_ads via inverse-CDF table
         ranks = np.arange(1, cfg.n_ads + 1, dtype=np.float64)
         w = 1.0 / ranks ** cfg.zipf_alpha

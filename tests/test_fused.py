@@ -264,6 +264,88 @@ if HAVE_HYPOTHESIS:
         assert_windowed_parity(keys_ts, lateness, policy)
 
 
+# ------------------------------------------------- chaos-schedule parity
+def run_chaos_count(fused, events=True, seed=29, t_cut=0.9):
+    """Count-per-key through a LIVE engine run (free-running async I/O,
+    not the quiesced protocol): replayable source, periodic checkpoints,
+    and a chaos-style failure + load-shift schedule on the sim clock.
+    The generator is cut on the source's logical clock, so recovery
+    replay and the load shift change when records arrive but never which
+    records exist — final state must be a pure function of the seed.
+
+    Migration is the one chaos kind excluded here: the fused plane
+    forbids the shard plane (test_fused_forbids_shards), so parity runs
+    over the remaining kinds.
+    """
+    import numpy as np
+
+    from repro.streaming.engine import SourceOp
+    from repro.streaming.recovery import CheckpointCoordinator
+
+    eng = Engine()
+    rng = np.random.Generator(np.random.PCG64(seed))
+
+    def gen(lt):
+        if lt >= t_cut:
+            return None
+        return int(rng.integers(20)), None, 64
+
+    def apply_count(tup, state):
+        return ((state or 0) + 1, [])
+
+    kw = dict(policy="tac", mode="async", cache_capacity=8 * 64,
+              state_size=64, io_workers=2)
+    if fused:
+        kw["fused"] = count_spec()
+        kw["fused_batch"] = 8
+    src = eng.add(SourceOp(eng, "src", 1, 4000.0, gen, replayable=True))
+    op = eng.add(StatefulOp(eng, "agg", 1, apply_count, LOCAL_NVME, **kw))
+    eng.connect(src, op)
+
+    coord = CheckpointCoordinator(eng, interval=0.2)
+    coord.start()
+    if events:
+        def fire_failure():
+            if coord.in_recovery:
+                eng.sim.after(0.05, fire_failure)
+                return
+            coord.fail(mode="warmed", down_time=0.05, replay_speedup=4.0)
+
+        eng.sim.at(0.45, fire_failure)
+        eng.sim.at(0.60, setattr, src, "rate_scale", 2.5)
+        eng.sim.at(0.80, setattr, src, "rate_scale", 1.0)
+
+    src.start()
+    eng.sim.after(eng.marker_interval, eng._inject_marker)
+    t = 0.0
+    while True:
+        t += 0.25
+        eng.sim.run_until(t)
+        log_end = src.log_base[0] + len(src.log[0])
+        if (src.logical_t[0] >= t_cut and src.replay_pos[0] >= log_end
+                and not coord.in_recovery):
+            break
+        assert t < 30.0, "chaos parity run failed to quiesce"
+    eng.sim.run_until(t + 0.5)               # drain in-flight I/O
+    src.stopped = True
+    state = {k: v for k, v in _final_state(op, 64).items()
+             if v is not None}
+    return state, coord.failures
+
+
+def test_chaos_schedule_parity_interpreted_vs_fused():
+    """Across a failure + load-shift schedule, the fused device path and
+    the interpreted path land on bit-identical final keyed state — and
+    both equal the unperturbed run (exactly-once state effects)."""
+    perturbed_interp, f1 = run_chaos_count(fused=False)
+    perturbed_fused, f2 = run_chaos_count(fused=True)
+    golden, _ = run_chaos_count(fused=False, events=False)
+    assert f1 >= 1 and f2 >= 1               # the failure actually fired
+    assert golden and sum(golden.values()) > 0
+    assert perturbed_interp == golden
+    assert perturbed_fused == golden
+
+
 # -------------------------------------------------------------- unit layer
 def test_fused_requires_tac_policy():
     eng = Engine()

@@ -10,6 +10,10 @@ its headline advantage on the (smoke) config it was run with:
     ``deadline.p99`` must be <= ``ondemand.p99`` (and is also reported
     against ``arrival``, informationally — the smoke config is small
     enough that only the on-demand bound is load-bearing);
+  * sessions (``BENCH_sessions*.json``): for every query present, the
+    session query under prefetch — ``deadline.p99`` (moving-deadline
+    re-hints) — must be <= ``ondemand.p99`` (``arrival`` is reported
+    informationally; ISSUE 9 acceptance);
   * joins (``BENCH_joins*.json``): for every query present,
     ``twosided.p99`` must be <= ``ondemand.p99`` (``onesided`` is
     reported informationally, same rationale);
@@ -82,6 +86,31 @@ def gate_windowing(data: dict, fails: list, name: str) -> None:
         if not ok:
             fails.append(f"{name}: {q} deadline p99 ({dl['p99']:.4f}s) > "
                          f"on-demand ({od['p99']:.4f}s)")
+
+
+def gate_sessions(data: dict, fails: list, name: str) -> None:
+    queries = [q for q in data if q != "config"]
+    if not queries:
+        fails.append(f"{name}: no query results")
+    for q in sorted(queries):
+        rs = data[q]
+        dl, od = rs.get("deadline"), rs.get("ondemand")
+        if not dl or not od:
+            fails.append(f"{name}: {q} missing deadline/ondemand results")
+            continue
+        ok = dl["p99"] <= od["p99"]
+        arr = rs.get("arrival")
+        extra = (f", arrival {arr['p99']*1e3:.2f}ms" if arr else "")
+        print(f"  sessions {q}: deadline p99 {dl['p99']*1e3:.2f}ms vs "
+              f"on-demand {od['p99']*1e3:.2f}ms{extra} -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: {q} deadline p99 ({dl['p99']:.4f}s) > "
+                         f"on-demand ({od['p99']:.4f}s)")
+        if dl.get("rehints", 0) <= 0:
+            # the mode must actually exercise moving deadlines, or the
+            # p99 bound is testing the wrong thing
+            fails.append(f"{name}: {q} deadline mode emitted no re-hints")
 
 
 def gate_joins(data: dict, fails: list, name: str) -> None:
@@ -274,6 +303,8 @@ def main(argv) -> int:
             gate_serving(data, fails, name)
         elif "windowing" in name:
             gate_windowing(data, fails, name)
+        elif "sessions" in name:
+            gate_sessions(data, fails, name)
         elif "joins" in name:
             gate_joins(data, fails, name)
         elif "recovery" in name:
