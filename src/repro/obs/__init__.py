@@ -1,6 +1,12 @@
-"""Unified observability plane (DESIGN.md §12): metrics registry with
-streaming quantile sketches, per-tuple critical-path tracing, and
-prefetch-quality (hint timeliness/accuracy) telemetry."""
+"""Unified observability plane (DESIGN.md §12, §16): metrics registry
+with streaming quantile sketches, per-tuple critical-path tracing,
+prefetch-quality (hint timeliness/accuracy) telemetry, logical-clock
+time series with health detectors, and Perfetto/Chrome-trace export."""
+from repro.obs.export import (chrome_trace, read_timeline_jsonl,
+                              timeline_jsonl)
+from repro.obs.health import (Alert, Detector, HealthMonitor,
+                              LoadShiftDetector, ORACLE_KINDS,
+                              SpikeDetector)
 from repro.obs.quality import PrefetchRecorder
 from repro.obs.registry import (
     METRIC_CATALOG,
@@ -14,10 +20,17 @@ from repro.obs.registry import (
     QuantileSketch,
     matches_catalog,
 )
+from repro.obs.timeseries import Interval, Timeline, interval_sketch
 from repro.obs.trace import STAGES, Tracer, TupleTrace, attach
 
 __all__ = [
+    "Alert",
+    "Detector",
+    "HealthMonitor",
+    "Interval",
+    "LoadShiftDetector",
     "METRIC_CATALOG",
+    "ORACLE_KINDS",
     "Counter",
     "Gauge",
     "Histogram",
@@ -27,7 +40,13 @@ __all__ = [
     "NULL_HISTOGRAM",
     "PrefetchRecorder",
     "QuantileSketch",
+    "SpikeDetector",
+    "Timeline",
+    "chrome_trace",
+    "interval_sketch",
     "matches_catalog",
+    "read_timeline_jsonl",
+    "timeline_jsonl",
     "STAGES",
     "Tracer",
     "TupleTrace",

@@ -232,6 +232,9 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        # counter values at the previous export_jsonl call, so each
+        # exported line can carry its own interval delta
+        self._last_export: Dict[str, float] = {}
 
     def counter(self, name: str) -> Counter:
         if not self.enabled:
@@ -276,9 +279,23 @@ class MetricsRegistry:
             out[n] = h.sketch.summary()
         return out
 
-    def export_jsonl(self, path: str, t: Optional[float] = None) -> None:
-        """Append one snapshot line ``{"t": ..., "metrics": {...}}``."""
-        line = {"t": t, "metrics": self.snapshot()}
+    def export_jsonl(self, path: str, t: Optional[float] = None,
+                     cumulative: bool = False) -> None:
+        """Append one snapshot line.  By default the line carries a
+        ``delta`` block — every counter's change since the PREVIOUS
+        export on this registry, keyed to the logical timestamp ``t`` —
+        alongside the cumulative ``metrics`` map, so downstream tools
+        read interval rates directly instead of diffing consecutive
+        snapshots by hand.  ``cumulative=True`` restores the legacy
+        cumulative-only line shape (and does not advance the delta
+        baseline)."""
+        line: Dict[str, Any] = {"t": t, "metrics": self.snapshot()}
+        if not cumulative:
+            delta: Dict[str, float] = {}
+            for n, c in self._counters.items():
+                delta[n] = c.value - self._last_export.get(n, 0)
+                self._last_export[n] = c.value
+            line["delta"] = delta
         with open(path, "a") as f:
             f.write(json.dumps(line, sort_keys=True) + "\n")
 
@@ -348,6 +365,9 @@ METRIC_CATALOG: Dict[str, str] = {
     "engine.<op>.fused.device_misses":
         "device TAC directory probe misses (host adjudicates: admit, "
         "park, or write-back race)",
+    "engine.<op>.fused.device_conflicts":
+        "device misses adjudicated while the plane was FULL (admission "
+        "must evict — the streaming analogue of serving probe conflicts)",
     # TAC eviction-reason breakdown, split by admission path
     "engine.<op>.evict.<reason>.<adm>":
         "evictions by reason (capacity|deadline|stale) and admission "
@@ -369,6 +389,18 @@ METRIC_CATALOG: Dict[str, str] = {
     "recovery.count": "recoveries performed",
     "recovery.warmup_hints": "hint-WAL + manifest entries replayed at warmup",
     "recovery.restore_s": "modelled restore + warmup wall time (s)",
+    # temporal plane (§16): logical-clock timeline + health detectors
+    "timeline.intervals": "interval snapshots cut on the logical clock",
+    "timeline.evicted":
+        "intervals dropped off the bounded ring (reports over a window "
+        "older than this are truncated, not silently shorter)",
+    "timeline.interval_s": "configured timeline interval (sim seconds)",
+    "health.alerts.raised": "health alerts raised (all detectors)",
+    "health.alerts.cleared": "raised alerts whose detector returned to ok",
+    "health.alerts.active": "detectors currently in the firing state",
+    "health.alerts.<kind>":
+        "alerts raised per kind: wm_lag|stall|precision|late_wall|"
+        "migration|recovery|load_shift",
     # per-tuple critical-path tracing (sampled spans)
     "trace.sampled": "tuples sampled for span tracing",
     "trace.finished":

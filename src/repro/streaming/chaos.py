@@ -250,7 +250,8 @@ def _install(eng: Engine, coord: CheckpointCoordinator,
 
 
 def run_schedule(schedule: FaultSchedule, t_cut: float = 2.0,
-                 mode: str = "prefetch") -> RunResult:
+                 mode: str = "prefetch", observe: bool = False,
+                 timeline_interval: float = 0.1) -> RunResult:
     """Run the chaos workload under ``schedule`` until the source's
     LOGICAL clock reaches ``t_cut``, quiesce, then flush all windows
     with a final watermark pair and collect the oracle observables.
@@ -260,6 +261,14 @@ def run_schedule(schedule: FaultSchedule, t_cut: float = 2.0,
     the final watermark pair (``FINAL`` fires every session, ``FINAL +
     1e-7`` runs the purge sweep once all fires have applied) makes the
     purge set a pure event-time function of the workload.
+
+    With ``observe``, the temporal plane (DESIGN.md §16) runs during the
+    LIVE phase — timeline + health detectors on ``timeline_interval`` —
+    and freezes before the drain (where throughput legitimately
+    collapses to zero and stall/load-shift alerts would be artifacts of
+    the harness, not the run).  The alerts land in
+    ``RunResult.metrics["alerts"]`` for the alert oracle
+    (``alert_oracle``).
     """
     eng = build_chaos_engine(schedule.seed, mode=mode)
     sim = eng.sim
@@ -285,6 +294,14 @@ def run_schedule(schedule: FaultSchedule, t_cut: float = 2.0,
     for ev in schedule.events:
         _install(eng, coord, chaos, ev)
 
+    if observe:
+        eng.enable_timeline(interval=timeline_interval)
+        # the observed window is the LIVE phase: past t_cut the logical
+        # stream is exhausted by construction and throughput falls to
+        # zero — an artifact of the cut, not a health signal, so the
+        # plane freezes there (oracle-gated events sit well inside)
+        sim.at(t_cut, eng.stop_timeline)
+
     for o in eng.operators.values():
         if isinstance(o, SourceOp):
             o.start()
@@ -306,7 +323,10 @@ def run_schedule(schedule: FaultSchedule, t_cut: float = 2.0,
             break
         if t > deadline:
             raise RuntimeError(f"chaos run failed to quiesce by t={t}")
-    # phase 2: drain in-flight data, then fire + purge deterministically
+    # phase 2: drain in-flight data, then fire + purge deterministically.
+    # The temporal plane freezes here: the drain's zero-throughput tail
+    # is a harness artifact, not run health
+    eng.stop_timeline()
     t += 0.5
     sim.run_until(t)
     final_wm = t_cut + GAP + 0.05
@@ -360,6 +380,10 @@ def run_schedule(schedule: FaultSchedule, t_cut: float = 2.0,
         "failures": coord.failures, "emits": len(emits),
         "rehints": sessla.rehints,
     }
+    if observe and eng.health is not None:
+        metrics["alerts"] = [a.as_dict() for a in eng.health.alerts]
+        metrics["health"] = eng.health.block()
+        metrics["timeline"] = eng.timeline.block()
     return RunResult(merged, registry, last_emit, emit_counts, absorbed,
                      metrics)
 
@@ -405,6 +429,98 @@ def compare(golden: RunResult, perturbed: RunResult) -> OracleReport:
         "hints_dropped": perturbed.metrics.get("hints_dropped_by_chaos", 0),
     }
     return OracleReport(not v, v, deviations)
+
+
+# ------------------------------------------------------- alert oracle (§16)
+# fault kind -> the alert kind its detection must raise (health.py's
+# ORACLE_KINDS, re-exported here so the harness is self-contained)
+ALERT_FOR = {"failure": "recovery", "migrate": "migration",
+             "load_shift": "load_shift"}
+
+
+def effective_events(schedule: FaultSchedule
+                     ) -> List[Tuple[FaultEvent, str]]:
+    """The oracle-gated events a run will actually EXPRESS, with the
+    alert kind each must raise.  Replays the shard-owner table in event
+    order (initial owner = shard % PARALLELISM) because a migrate whose
+    destination already owns the shard is a no-op at the engine
+    (``StatefulOp.migrate_shard`` returns early) — ground truth must not
+    demand an alert for a fault that physically cannot happen.  Same for
+    a load shift at scale 1.0.  Assumes migrations execute in schedule
+    order (checkpoint-deferral preserves relative order for the
+    well-separated schedules the oracle benchmarks use)."""
+    owner = [s % PARALLELISM for s in range(N_SHARDS)]
+    out: List[Tuple[FaultEvent, str]] = []
+    for ev in sorted(schedule.events, key=lambda e: e.at):
+        if ev.kind == "failure":
+            out.append((ev, ALERT_FOR[ev.kind]))
+        elif ev.kind == "migrate":
+            shard, dst = ev.params
+            shard, dst = shard % N_SHARDS, dst % PARALLELISM
+            if owner[shard] != dst:
+                owner[shard] = dst
+                out.append((ev, ALERT_FOR[ev.kind]))
+        elif ev.kind == "load_shift":
+            scale, dur = ev.params
+            if scale != 1.0:
+                out.append((ev, ALERT_FOR[ev.kind]))
+    return out
+
+
+def alert_oracle(schedule: FaultSchedule, perturbed: RunResult,
+                 golden: RunResult, delay: float = 0.8) -> Dict[str, Any]:
+    """Score the temporal plane against the seeded schedule as ground
+    truth (both runs must have been produced with ``observe=True``):
+
+      * recall — every effective failure/migrate/load_shift event must
+        raise an alert of its mapped kind within ``delay`` logical
+        seconds of the event's onset (windowed faults get their duration
+        added: the shift exists for that long);
+      * golden soundness — the unperturbed run of the same seed must
+        raise ZERO stall alerts (and is reported on all kinds).
+
+    Both are gated in BENCH_obs.json's ``alerts`` block."""
+    galerts = golden.metrics.get("alerts", [])
+    palerts = perturbed.metrics.get("alerts", [])
+    per_event: List[Dict[str, Any]] = []
+    matched = 0
+    events = effective_events(schedule)
+    for ev, want in events:
+        horizon = ev.at + delay
+        if ev.kind == "load_shift":
+            horizon += ev.params[1]
+        hit = [a for a in palerts
+               if a["kind"] == want and ev.at <= a["t"] <= horizon]
+        if hit:
+            matched += 1
+        per_event.append({"kind": ev.kind, "at": ev.at, "want": want,
+                          "matched": bool(hit),
+                          "alert_t": hit[0]["t"] if hit else None})
+    by_kind: Dict[str, Dict[str, int]] = {}
+    for e in per_event:
+        b = by_kind.setdefault(e["kind"], {"injected": 0, "matched": 0})
+        b["injected"] += 1
+        b["matched"] += int(e["matched"])
+    return {
+        "injected": len(events),
+        "matched": matched,
+        "recall": matched / len(events) if events else 1.0,
+        "per_kind": by_kind,
+        "per_event": per_event,
+        "golden_alerts": len(galerts),
+        "golden_false_stall": sum(1 for a in galerts
+                                  if a["kind"] == "stall"),
+        "golden_by_kind": _count_kinds(galerts),
+        "perturbed_by_kind": _count_kinds(palerts),
+        "delay": delay,
+    }
+
+
+def _count_kinds(alerts: List[dict]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for a in alerts:
+        out[a["kind"]] = out.get(a["kind"], 0) + 1
+    return out
 
 
 def check_schedule(schedule: FaultSchedule, t_cut: float = 2.0,

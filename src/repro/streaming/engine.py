@@ -22,8 +22,8 @@ from repro.core.policies import ClockCache, LRUCache
 from repro.core.prefetch import (LookaheadCandidate, PrefetchingController,
                                  PrefetchingManager)
 from repro.core.tac import TimestampAwareCache
-from repro.obs import (MetricsRegistry, PrefetchRecorder, QuantileSketch,
-                       Tracer)
+from repro.obs import (HealthMonitor, MetricsRegistry, PrefetchRecorder,
+                       QuantileSketch, Timeline, Tracer)
 from repro.runtime.compression import hint_batch_nbytes
 from repro.streaming.backend import BackendModel, StateBackend
 from repro.streaming.fused import FusedPlane, FusedSpec, Lane
@@ -964,17 +964,24 @@ class StatefulOp(Operator):
             self.backends[src].export_keys(in_shard))
         nbytes = sum(e.size for e in entries)
         delay = MIGRATE_RTT + nbytes / MIGRATE_BANDWIDTH
+        mig_id = next(self.engine._event_ids)
+        self.engine.log_event("migrate_begin", id=mig_id, op=self.name,
+                              shard=shard, src=src, dst=dst_sub,
+                              bytes=nbytes)
         self.sim.after(delay, self._finish_migration, shard, dst_sub,
-                       entries)
+                       entries, mig_id)
 
     def _finish_migration(self, shard: int, dst_sub: int,
-                          entries: List[Any]) -> None:
+                          entries: List[Any],
+                          mig_id: Optional[int] = None) -> None:
         # TAC entries keep their timestamps (a prefetched entry whose
         # hint ts lies in the future stays protected across the move);
         # LRU/Clock entries carry none and re-enter at migration time
         self.caches[dst_sub].import_entries(entries, now_ts=self.sim.t)
         self.shards.last_finish_t = self.sim.t
         self.shards.finish_migration(shard)
+        self.engine.log_event("migrate_end", id=mig_id, shard=shard,
+                              entries=len(entries))
         pending = self.shard_pending.pop(shard, [])
         if pending:
             self.deliver_batch(dst_sub, pending)
@@ -1595,6 +1602,18 @@ class Engine:
         self.tracer = Tracer(self.registry)
         self._export_path: Optional[str] = None
         self._export_interval = 0.0
+        # temporal plane (DESIGN.md §16): interval time series + health
+        # detectors on the logical clock, plus a bounded event log the
+        # Perfetto export fuses with the sampled spans.  All off by
+        # default; the hot-path cost when off is one flag check at the
+        # few event sites (epoch/migration/fire/recovery)
+        self.timeline: Optional[Timeline] = None
+        self.health: Optional[HealthMonitor] = None
+        self.events: List[Tuple[str, float, dict]] = []
+        self.record_events = False
+        self._event_cap = 65536
+        self._event_ids = itertools.count(1)
+        self._timeline_on = False
         # sink latency: percentiles come from the UNCAPPED streaming
         # sketch (no truncation bias); the bounded deques keep the most
         # RECENT samples for timeline slicing (recovery/sharding
@@ -1724,7 +1743,8 @@ class Engine:
 
     def enable_export(self, path: str, interval: float = 1.0) -> None:
         """Append a registry snapshot line to ``path`` every ``interval``
-        sim seconds (JSONL: ``{"t": ..., "metrics": {...}}``)."""
+        sim seconds (JSONL: ``{"t": ..., "delta": {...}, "metrics":
+        {...}}`` — see ``MetricsRegistry.export_jsonl``)."""
         self._export_path = path
         self._export_interval = interval
         self.sim.after(interval, self._export_tick)
@@ -1733,6 +1753,49 @@ class Engine:
         self._sync_registry()
         self.registry.export_jsonl(self._export_path, t=self.sim.t)
         self.sim.after(self._export_interval, self._export_tick)
+
+    def enable_timeline(self, interval: float = 0.1, capacity: int = 600,
+                        detectors: bool = True, **health_kw) -> None:
+        """Turn on the temporal plane (DESIGN.md §16): every
+        ``interval`` sim seconds, mirror the operator counters and cut a
+        timeline interval (counter deltas, gauge samples, histogram
+        interval sketches) into a bounded ring; with ``detectors``, run
+        the health detectors over each cut and log their alerts.  Extra
+        keyword args tune ``HealthMonitor`` thresholds."""
+        self.timeline = Timeline(self.registry, interval, capacity)
+        if detectors:
+            stateful = [n for n, op in self.operators.items()
+                        if isinstance(op, StatefulOp)]
+            self.health = HealthMonitor(self.timeline, stateful,
+                                        **health_kw)
+        self.record_events = True
+        self._timeline_on = True
+        self.sim.after(interval, self._timeline_tick)
+
+    def stop_timeline(self) -> None:
+        """Freeze the temporal plane: no further cuts or detector
+        updates (the chaos harness calls this before its drain phase,
+        where throughput legitimately falls to zero)."""
+        self._timeline_on = False
+
+    def _timeline_tick(self) -> None:
+        if not self._timeline_on or self.timeline is None:
+            return
+        self._sync_registry()
+        iv = self.timeline.tick(self.sim.t)
+        if self.health is not None:
+            for a in self.health.observe(iv):
+                self.log_event("alert", alert_kind=a.kind, op=a.op,
+                               value=a.value)
+        self.sim.after(self.timeline.interval, self._timeline_tick)
+
+    def log_event(self, kind: str, **fields) -> None:
+        """Append to the bounded engine event log (epoch barriers,
+        migrations, failures/recoveries, window fires, alerts) for the
+        Perfetto export.  No-op unless ``record_events`` is on."""
+        if not self.record_events or len(self.events) >= self._event_cap:
+            return
+        self.events.append((kind, self.sim.t, fields))
 
     def trigger_checkpoint(self, checkpoint_id: int) -> None:
         """Inject an epoch's barriers at every source subtask (each
@@ -1900,6 +1963,8 @@ class Engine:
                             1, sum(c.batches * c.batch for c in fp)),
                         "device_hits": sum(c.device_hits for c in fp),
                         "device_misses": sum(c.device_misses for c in fp),
+                        "device_conflicts": sum(c.device_conflicts
+                                                for c in fp),
                     }
                 if op.shards is not None:
                     # per-shard routed-plane counters (DESIGN.md §9), not
@@ -1935,6 +2000,12 @@ class Engine:
         if self.tracer.active:
             # sampled critical-path breakdown (DESIGN.md §12)
             out["trace"] = self.tracer.summary()
+        if self.timeline is not None:
+            # temporal-plane rollup (DESIGN.md §16)
+            out["timeline"] = self.timeline.block()
+        if self.health is not None:
+            out["health"] = self.health.block()
+            out["alerts"] = [a.as_dict() for a in self.health.alerts]
         self._sync_registry()
         return out
 
@@ -2013,6 +2084,8 @@ class Engine:
                     sum(c.device_hits for c in fp))
                 r.counter(f"{pre}.fused.device_misses").set(
                     sum(c.device_misses for c in fp))
+                r.counter(f"{pre}.fused.device_conflicts").set(
+                    sum(c.device_conflicts for c in fp))
             if op.shards is not None:
                 op.shards.registry_sync(r, pre, op.shard_pending)
         r.counter("engine.net.data_bytes").set(int(data_bytes))

@@ -212,6 +212,7 @@ class FusedPlane:
         self.lanes = 0
         self.device_hits = 0
         self.device_misses = 0
+        self.device_conflicts = 0
 
     # ------------------------------------------------------------ internals
     def _intern(self, key) -> int:
@@ -615,8 +616,16 @@ class FusedPlane:
         tallies = np.asarray(out.tallies)
         self.batches += 1
         self.lanes += n
+        misses = int(tallies[1])
         self.device_hits += int(tallies[0])
-        self.device_misses += int(tallies[1])
+        self.device_misses += misses
+        # conflict tally (§12): misses in excess of the slots free (or
+        # already queued to free) when the batch was adjudicated — each
+        # one forces an eviction to admit, the streaming analogue of the
+        # serving plane's full-bucket probe conflicts
+        free_now = len(self._free) + len(self._pending_drops)
+        if misses > free_now:
+            self.device_conflicts += misses - free_now
         self.hits += int(tallies[0])
         # shadow advance for hit lanes, vectorized (fp64 order + dirty)
         if hit.any():

@@ -224,6 +224,7 @@ class CheckpointCoordinator:
         self.pending = {"epoch": epoch, "t0": self.sim.t,
                         "offsets": offsets, "acks": {},
                         "expected": expected, "bytes": 0}
+        self.engine.log_event("epoch_trigger", id=epoch)
         self.engine.trigger_checkpoint(epoch)
 
     def defer_migration(self, op_name: str, shard: int,
@@ -255,6 +256,8 @@ class CheckpointCoordinator:
             "ops": p["acks"], "bytes": p["bytes"]})
         self.epochs_completed += 1
         self.snapshot_bytes_total += p["bytes"]
+        self.engine.log_event("epoch_complete", id=epoch,
+                              bytes=p["bytes"])
         self.pending = None
         # reclaim logs no restore can need any more
         for name, offs in p["offsets"].items():
@@ -344,8 +347,10 @@ class CheckpointCoordinator:
             op.reset_volatile()
         rec = self.store.latest()
         entry = {"t_fail": now, "mode": mode, "purged_events": purged,
-                 "epoch": rec[0] if rec else None, "down_time": down_time}
+                 "epoch": rec[0] if rec else None, "down_time": down_time,
+                 "fid": self.failures}
         self.recoveries.append(entry)
+        eng.log_event("failure", id=self.failures, mode=mode)
         self.sim.after(down_time, self._restore, rec, entry, mode,
                        replay_speedup, warmup_lead)
 
@@ -477,6 +482,8 @@ class CheckpointCoordinator:
                         sub, copy.deepcopy(snap["inflight"]))
         entry["warmup_hints"] = self.warmup_hints
         self.in_recovery = False
+        eng.log_event("recovered", id=entry.get("fid"),
+                      warmup_hints=self.warmup_hints)
         # migrations requested during the outage waited for the restore
         queued, self._queued_migrations = self._queued_migrations, []
         for op_name, shard, dst_sub in queued:

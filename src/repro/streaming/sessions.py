@@ -324,6 +324,8 @@ class SessionWindowedOp(WindowedStatefulOp):
                 return self.service_time
             payload = self.emit_fn(base, wid, sess["end"], state)
             self.fires += 1
+            if self.engine.record_events:
+                self.engine.log_event("fire", op=self.name, wid=wid)
             if payload is not None:
                 self.outputs += 1
                 self.emit(sub, Tuple_(sess["end"], base, payload,

@@ -204,6 +204,8 @@ class WindowedStatefulOp(StatefulOp):
             end = self.assigner.end(wk.wid)
             payload = self.emit_fn(wk.base, wk.wid, end, state)
             self.fires += 1
+            if self.engine.record_events:
+                self.engine.log_event("fire", op=self.name, wid=wk.wid)
             if payload is not None:
                 self.outputs += 1
                 self.emit(sub, Tuple_(end, wk.base, payload, self.out_size,
@@ -316,6 +318,8 @@ class WindowedStatefulOp(StatefulOp):
         end = self.assigner.end(wk.wid)
         payload = self.emit_fn(wk.base, wk.wid, end, state)
         self.fires += 1
+        if self.engine.record_events:
+            self.engine.log_event("fire", op=self.name, wid=wk.wid)
         if payload is not None:
             self.outputs += 1
             self.emit(sub, Tuple_(end, wk.base, payload, self.out_size,

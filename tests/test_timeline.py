@@ -1,0 +1,422 @@
+"""Temporal observability plane tests (DESIGN.md §16).
+
+Four claims: (1) ``interval_sketch`` turns two cumulative sketch states
+into an EXACT per-interval histogram (counts/mean) that stays mergeable,
+(2) the ``Timeline`` ring retains the newest ``capacity`` intervals and
+reports — not hides — what it evicted, (3) hysteresis detectors never
+flap: noise confined to the gap between the fire and clear thresholds
+raises at most one alert (scripted sequences + a hypothesis property),
+and (4) the chaos alert oracle holds end to end — every effective
+injected fault raises its mapped alert within the logical delay bound,
+and the golden run raises none.
+"""
+import json
+
+import pytest
+
+from repro.obs import (Alert, Detector, HealthMonitor, LoadShiftDetector,
+                       MetricsRegistry, QuantileSketch, SpikeDetector,
+                       Timeline, interval_sketch, read_timeline_jsonl,
+                       timeline_jsonl)
+from repro.obs.timeseries import _sketch_state
+
+from tests._hypothesis_compat import given, settings, st
+
+
+# ------------------------------------------------------- interval sketch
+def test_interval_sketch_counts_and_mean_are_exact():
+    sk = QuantileSketch()
+    for v in (1e-3, 2e-3, 5e-3):
+        sk.observe(v)
+    state = _sketch_state(sk)
+    batch = [4e-3, 4e-3, 9e-3, -2e-3, 0.0]
+    for v in batch:
+        sk.observe(v)
+    iv = interval_sketch(state, sk)
+    assert iv.count == len(batch)
+    assert iv.total == pytest.approx(sum(batch))
+    assert iv.mean == pytest.approx(sum(batch) / len(batch))
+    # bin-midpoint extremes stay within the sketch's relative error,
+    # and a new cumulative extreme is carried exactly
+    assert iv.vmin == -2e-3              # new cumulative min -> exact
+    assert iv.vmax == 9e-3               # new cumulative max -> exact
+    assert iv.quantile(0.5) == pytest.approx(4e-3, rel=0.05)
+
+
+def test_interval_sketch_none_prev_equals_cumulative():
+    sk = QuantileSketch()
+    for v in (1.0, 2.0, 3.0):
+        sk.observe(v)
+    iv = interval_sketch(None, sk)
+    assert iv.count == sk.count
+    assert iv.quantile(0.5) == pytest.approx(sk.quantile(0.5))
+
+
+def test_interval_sketches_merge_back_to_cumulative():
+    """Splitting a stream into intervals then merging the interval
+    sketches reproduces the cumulative quantiles — the property that
+    makes p99-over-a-window a merge instead of a guess."""
+    sk = QuantileSketch()
+    merged = QuantileSketch()
+    state = None
+    rng_vals = [((i * 37) % 100 + 1) * 1e-4 for i in range(400)]
+    for chunk in range(4):
+        for v in rng_vals[chunk * 100:(chunk + 1) * 100]:
+            sk.observe(v)
+        iv = interval_sketch(state, sk)
+        state = _sketch_state(sk)
+        merged.merge(iv)
+    assert merged.count == sk.count
+    for q in (0.1, 0.5, 0.9, 0.99):
+        assert merged.quantile(q) == pytest.approx(sk.quantile(q), rel=1e-9)
+
+
+def test_empty_interval_sketch_is_zero():
+    sk = QuantileSketch()
+    sk.observe(1.0)
+    state = _sketch_state(sk)
+    iv = interval_sketch(state, sk)     # nothing new observed
+    assert iv.count == 0 and iv.total == 0.0
+
+
+# ------------------------------------------------------------- ring buffer
+def _tl(interval=0.1, capacity=4):
+    r = MetricsRegistry()
+    return r, Timeline(r, interval=interval, capacity=capacity)
+
+
+def test_ring_retention_and_eviction_accounting():
+    r, tl = _tl(capacity=4)
+    c = r.counter("engine.q.processed")
+    for i in range(10):
+        c.inc(5)
+        tl.tick(0.1 * (i + 1))
+    b = tl.block()
+    assert b["intervals"] == 10
+    assert b["retained"] == 4
+    assert b["evicted"] == 6
+    # the ring holds the NEWEST intervals
+    assert [iv.t1 for iv in tl.ring] == pytest.approx([0.7, 0.8, 0.9, 1.0])
+    # counter deltas are per-interval, not cumulative
+    assert all(iv.deltas["engine.q.processed"] == 5 for iv in tl.ring)
+    # the timeline's own meta-counters never self-count
+    assert all(not k.startswith("timeline.") for iv in tl.ring
+               for k in iv.deltas)
+
+
+def test_select_and_series_window_filters():
+    r, tl = _tl(capacity=32)
+    c = r.counter("engine.q.processed")
+    g = r.gauge("engine.q.queue.depth")
+    for i in range(8):
+        c.inc(i)
+        g.set(float(i))
+        tl.tick(0.1 * (i + 1))
+    assert len(tl.select()) == 8
+    win = tl.select(since=0.35, until=0.65)
+    assert [iv.t1 for iv in win] == pytest.approx([0.4, 0.5, 0.6])
+    s = tl.series("engine.q.processed", since=0.35, until=0.65)
+    assert [v for _, v in s] == [3, 4, 5]
+    sg = tl.series("engine.q.queue.depth", since=0.75)
+    assert [v for _, v in sg] == [7.0]
+
+
+def test_merged_sketch_over_window():
+    r, tl = _tl(capacity=32)
+    h = r.histogram("engine.sink.latency")
+    for i in range(4):
+        for _ in range(10):
+            h.observe(1e-3 * (i + 1))
+        tl.tick(0.1 * (i + 1))
+    full = tl.merged_sketch("engine.sink.latency")
+    assert full.count == 40
+    part = tl.merged_sketch("engine.sink.latency", since=0.25)
+    assert part.count == 20              # intervals ending 0.3, 0.4
+    assert part.quantile(0.5) >= full.quantile(0.5)
+
+
+def test_ratio_series_skips_low_volume():
+    r, tl = _tl(capacity=32)
+    used = r.counter("engine.q.prefetch.used")
+    staged = r.counter("engine.q.prefetch.staged")
+    used.inc(8), staged.inc(10)
+    tl.tick(0.1)
+    tl.tick(0.2)                         # empty interval: no denominator
+    used.inc(3), staged.inc(10)
+    tl.tick(0.3)
+    s = tl.ratio_series("engine.q.prefetch.used",
+                        ["engine.q.prefetch.staged"], min_den=1.0)
+    assert [(round(t, 1), v) for t, v in s] == [(0.1, 0.8), (0.3, 0.3)]
+
+
+def test_timeline_validates_args():
+    r = MetricsRegistry()
+    with pytest.raises(ValueError):
+        Timeline(r, interval=0.0)
+    with pytest.raises(ValueError):
+        Timeline(r, capacity=1)
+
+
+# ------------------------------------------------------ hysteresis detector
+def test_detector_scripted_onset_and_clear():
+    d = Detector("wm_lag", fire=1.0, clear=0.5,
+                 fire_after=2, clear_after=2, op="q")
+    seq = [0.2, 1.2,                      # 1 hot interval: not yet
+           0.3,                           # resets the hot count
+           1.5, 1.4,                      # 2 consecutive -> fire
+           0.7, 0.4,                      # 1 cool interval only
+           0.6,                           # above clear: resets cool
+           0.4, 0.3]                      # 2 consecutive -> clear
+    alerts = [d.update(0.1 * (i + 1), v) for i, v in enumerate(seq)]
+    raised = [a for a in alerts if a is not None]
+    assert len(raised) == 1
+    a = raised[0]
+    assert a.kind == "wm_lag" and a.op == "q"
+    assert a.t == pytest.approx(0.5)     # fired on the 5th interval
+    assert a.cleared_t == pytest.approx(1.0)
+    assert not d.firing
+
+
+def test_detector_below_direction():
+    d = Detector("precision", fire=0.30, clear=0.45,
+                 direction="below", fire_after=2, clear_after=1)
+    assert d.update(0.1, 0.9) is None
+    assert d.update(0.2, 0.1) is None    # 1 low interval
+    a = d.update(0.3, 0.2)               # 2nd -> fire
+    assert a is not None and a.value == 0.2
+    assert d.update(0.4, 0.5) is None and not d.firing
+    assert a.cleared_t == pytest.approx(0.4)
+
+
+def test_detector_none_freezes_counts():
+    d = Detector("stall", fire=10.0, clear=2.0, fire_after=2)
+    d.update(0.1, 50.0)
+    d.update(0.2, None)                  # no evidence: count holds at 1
+    assert not d.firing
+    assert d.update(0.3, 50.0) is not None
+
+
+def test_detector_rejects_inverted_thresholds():
+    with pytest.raises(ValueError):
+        Detector("x", fire=1.0, clear=2.0)                 # above: fire>clear
+    with pytest.raises(ValueError):
+        Detector("x", fire=0.5, clear=0.2, direction="below")
+    with pytest.raises(ValueError):
+        Detector("x", fire=2.0, clear=1.0, fire_after=0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=0.55, max_value=2.5,
+                          allow_nan=False), min_size=1, max_size=80))
+def test_no_flapping_inside_the_hysteresis_gap(values):
+    """Noise that never crosses the CLEAR threshold (0.5) raises at most
+    one alert no matter how often it crosses FIRE (1.0): the gap must be
+    crossed twice for a second alert, which these sequences cannot do."""
+    d = Detector("wm_lag", fire=1.0, clear=0.5, fire_after=2,
+                 clear_after=2)
+    raised = sum(1 for i, v in enumerate(values)
+                 if d.update(0.1 * (i + 1), v) is not None)
+    assert raised <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=0.95,
+                          allow_nan=False), min_size=1, max_size=80))
+def test_never_fires_below_threshold(values):
+    d = Detector("wm_lag", fire=1.0, clear=0.5, fire_after=2,
+                 clear_after=2)
+    assert all(d.update(0.1 * (i + 1), v) is None
+               for i, v in enumerate(values))
+    assert not d.firing
+
+
+# ------------------------------------------------- spike + load detectors
+def test_spike_detector_one_alert_per_burst():
+    d = SpikeDetector("migration", clear_after=2)
+    a1 = d.update(0.1, 1.0)
+    assert a1 is not None
+    assert d.update(0.2, 2.0) is None    # burst continues, no new alert
+    d.update(0.3, 0.0)
+    d.update(0.4, 0.0)                    # 2 quiet intervals -> cleared
+    assert a1.cleared_t == pytest.approx(0.4)
+    assert d.update(0.5, 1.0) is not None  # a NEW burst alerts again
+
+
+def test_load_shift_detector_fires_and_freezes_baseline():
+    d = LoadShiftDetector(band=1.6, clear_band=1.25, window=8,
+                          fire_after=2, min_volume=20.0)
+    t = 0.0
+    for _ in range(8):                    # steady 100/interval baseline
+        t += 0.1
+        assert d.update(t, 100.0) is None
+    raised = []
+    for _ in range(6):                    # 2.5x shift, sustained
+        t += 0.1
+        a = d.update(t, 250.0)
+        if a is not None:
+            raised.append(a)
+    # baseline froze while firing, so the shifted rate never became the
+    # new normal and the alert did not self-clear
+    assert len(raised) == 1 and d.firing
+    assert raised[0].value == pytest.approx(2.5)
+    for _ in range(2):                    # back inside the clear band
+        t += 0.1
+        d.update(t, 100.0)
+    assert not d.firing
+    assert raised[0].cleared_t == pytest.approx(t)
+
+
+def test_load_shift_detector_silent_below_min_volume():
+    d = LoadShiftDetector(min_volume=20.0)
+    t = 0.0
+    for v in (5, 5, 5, 5, 40, 40):        # quiet baseline: never fires
+        t += 0.1
+        assert d.update(t, float(v)) is None
+
+
+# ---------------------------------------------------------- health monitor
+def test_health_monitor_wm_lag_and_stall_alerts():
+    r = MetricsRegistry()
+    tl = Timeline(r, interval=0.1, capacity=64)
+    hm = HealthMonitor(tl, ["q"], wm_lag_fire=1.0, wm_lag_clear=0.5,
+                       queue_fire=100.0, queue_clear=10.0, fire_after=2)
+    lag = r.gauge("engine.q.watermark.lag")
+    depth = r.gauge("engine.q.queue.depth")
+    new = []
+    for i, (lg, dp) in enumerate([(0.1, 5), (1.5, 5), (1.5, 500),
+                                  (1.6, 500), (0.2, 2), (0.1, 2)]):
+        lag.set(lg)
+        depth.set(float(dp))
+        new += hm.observe(tl.tick(0.1 * (i + 1)))
+    kinds = sorted(a.kind for a in new)
+    assert kinds == ["stall", "wm_lag"]
+    assert all(a.op == "q" for a in new)
+    b = hm.block()
+    assert b["raised"] == 2 and b["active"] == 0 and b["cleared"] == 2
+    assert r.counter("health.alerts.raised").value == 2
+    assert r.counter("health.alerts.wm_lag").value == 1
+    assert r.counter("health.alerts.stall").value == 1
+
+
+def test_health_monitor_precision_collapse():
+    r = MetricsRegistry()
+    tl = Timeline(r, interval=0.1, capacity=64)
+    hm = HealthMonitor(tl, ["q"], min_volume=10.0, fire_after=2)
+    used = r.counter("engine.q.prefetch.used")
+    staged = r.counter("engine.q.prefetch.staged")
+    new = []
+    for i, (u, s) in enumerate([(18, 20), (18, 20), (2, 20), (2, 20),
+                                (2, 20)]):
+        used.inc(u)
+        staged.inc(s)
+        new += hm.observe(tl.tick(0.1 * (i + 1)))
+    assert [a.kind for a in new] == ["precision"]
+
+
+# ------------------------------------------------------- export round-trip
+def test_timeline_jsonl_round_trip(tmp_path):
+    r, tl = _tl(capacity=8)
+    c = r.counter("engine.q.processed")
+    h = r.histogram("engine.sink.latency")
+    for i in range(3):
+        c.inc(10)
+        h.observe(1e-3)
+        tl.tick(0.1 * (i + 1))
+    alerts = [Alert("wm_lag", "q", 0.2, 1.5, 1.0, "test")]
+    path = str(tmp_path / "tl.jsonl")
+    n = timeline_jsonl(tl, path, alerts=alerts)
+    assert n == 4                        # 3 intervals + 1 alert line
+    ivs, al = read_timeline_jsonl(path)
+    assert len(ivs) == 3 and len(al) == 1
+    assert ivs[0]["deltas"]["engine.q.processed"] == 10
+    assert ivs[0]["quantiles"]["engine.sink.latency"]["count"] == 1
+    assert al[0]["kind"] == "wm_lag" and al[0]["t"] == 0.2
+
+
+def test_registry_export_jsonl_delta_block(tmp_path):
+    r = MetricsRegistry()
+    c = r.counter("engine.q.processed")
+    path = str(tmp_path / "m.jsonl")
+    c.inc(7)
+    r.export_jsonl(path, t=0.5)
+    c.inc(3)
+    r.export_jsonl(path, t=1.0)
+    r.export_jsonl(path, t=1.5, cumulative=True)   # legacy shape
+    lines = [json.loads(x) for x in open(path)]
+    assert lines[0]["delta"]["engine.q.processed"] == 7
+    assert lines[1]["delta"]["engine.q.processed"] == 3
+    assert lines[1]["metrics"]["engine.q.processed"] == 10
+    assert "delta" not in lines[2]
+
+
+# --------------------------------------------------- chaos alert oracle
+@pytest.mark.slow
+def test_chaos_alert_oracle_on_seeded_schedules():
+    """The headline soundness check: on >= 3 seeded schedules, every
+    EFFECTIVE injected fault (failure / owner-changing migrate /
+    non-unit load shift) raises its mapped alert within the logical
+    delay bound, the golden run raises ZERO alerts, and the
+    exactly-once state oracle still passes under observation."""
+    from repro.streaming.chaos import (FaultEvent, FaultSchedule,
+                                       alert_oracle, compare,
+                                       run_schedule)
+    scheds = [
+        FaultSchedule(101, (
+            FaultEvent("load_shift", 0.5, (2.5, 0.5)),
+            FaultEvent("migrate", 1.0, (0, 1)),
+            FaultEvent("failure", 1.3, ("warmed",)))),
+        FaultSchedule(202, (
+            FaultEvent("failure", 0.7, ("cold",)),
+            FaultEvent("load_shift", 1.1, (0.4, 0.4)),
+            FaultEvent("migrate", 1.4, (1, 0)))),
+        FaultSchedule(303, (
+            FaultEvent("migrate", 0.5, (3, 0)),
+            FaultEvent("migrate", 0.7, (2, 0)),   # no-op: owner already 0
+            FaultEvent("load_shift", 0.9, (3.0, 0.4)),
+            FaultEvent("failure", 1.35, ("warmed",)))),
+    ]
+    for sched in scheds:
+        golden = run_schedule(sched.with_events(()), t_cut=2.0,
+                              observe=True)
+        pert = run_schedule(sched, t_cut=2.0, observe=True)
+        rep = alert_oracle(sched, pert, golden)
+        assert rep["recall"] == 1.0, (sched.seed, rep["per_event"])
+        assert rep["golden_alerts"] == 0, (sched.seed, golden.metrics)
+        assert rep["golden_false_stall"] == 0
+        for kind, pk in rep["per_kind"].items():
+            assert pk["matched"] == pk["injected"], (sched.seed, kind)
+        assert compare(golden, pert).ok   # observation never perturbs state
+    # seed 303's no-op migrate must be filtered, not silently unmatched
+    from repro.streaming.chaos import effective_events
+    eff = effective_events(scheds[2])
+    assert sum(1 for _, k in eff if k == "migration") == 1
+
+
+@pytest.mark.slow
+def test_engine_timeline_smoke_q5():
+    """A healthy windowed run with the plane enabled: intervals cut on
+    the logical clock, zero alerts, fused fill-ratio series present,
+    and a loadable Chrome trace with span + control + counter events."""
+    from repro.obs import chrome_trace
+    from repro.streaming.backend import LOCAL_NVME
+    from repro.streaming.nexmark import NexmarkConfig, build_query
+    cfg = NexmarkConfig(rate=3000.0, active_window=1.0, oo_bound=0.3,
+                        seed=7)
+    eng = build_query("q5", "tac", "prefetch", cfg, cache_entries=256,
+                      backend=LOCAL_NVME, parallelism=2,
+                      source_parallelism=1, buffer_timeout=0.002,
+                      hint_ts="deadline", window_size=1.0,
+                      window_slide=0.5)
+    eng.enable_timeline(interval=0.1)
+    eng.enable_tracing(sample_every=16)
+    m = eng.run(duration=1.2, warmup=0.0)
+    assert m["timeline"]["intervals"] >= 10
+    assert m["health"]["raised"] == 0 and m["alerts"] == []
+    trace = chrome_trace(eng)
+    blob = json.dumps(trace)              # must be valid JSON
+    evs = trace["traceEvents"]
+    assert any(e.get("ph") == "X" and e.get("name") == "tuple"
+               for e in evs)
+    assert any(e.get("ph") == "C" for e in evs)
+    assert all(isinstance(e.get("ts", 0), int) for e in evs)
+    assert len(blob) > 1000

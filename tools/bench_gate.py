@@ -199,6 +199,44 @@ def gate_obs(data: dict, fails: list, name: str) -> None:
         fails.append(f"{name}: hint-quality block empty or degenerate "
                      f"(staged={hq.get('staged', 0)}, precision={prec}, "
                      f"recall={rec})")
+    # temporal plane (ISSUE 10): timeline + detectors enabled must also
+    # hold the 0.95x overhead floor, and the chaos alert oracle must be
+    # sound (zero alerts on golden) and sensitive (every effective
+    # injected fault kind matched within the logical delay bound)
+    tl = data.get("timeline")
+    if not tl:
+        fails.append(f"{name}: missing timeline-mode result")
+    else:
+        r = tl["tuples_per_s"] / d if d else 0.0
+        ok = r >= 0.95
+        print(f"  obs: timeline {tl['tuples_per_s']:.0f} tup/s "
+              f"(x{r:.3f} of disabled, floor 0.95) -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            fails.append(f"{name}: timeline throughput x{r:.3f} of "
+                         f"disabled (< 0.95)")
+        ivs = tl.get("timeline", {}).get("intervals", 0)
+        if ivs < 2:
+            fails.append(f"{name}: timeline run cut {ivs} intervals "
+                         f"(plane not ticking?)")
+    al = data.get("alerts")
+    if not al:
+        fails.append(f"{name}: missing alerts (chaos oracle) block")
+        return
+    recall = al.get("recall", 0.0)
+    golden = al.get("golden_alerts", -1)
+    stall = al.get("golden_false_stall", -1)
+    per_kind = al.get("per_kind", {})
+    kinds_ok = all(pk.get("matched", 0) >= 1 for pk in per_kind.values()) \
+        and len(per_kind) >= 3
+    ok = recall == 1.0 and golden == 0 and stall == 0 and kinds_ok
+    print(f"  obs: alert oracle recall={recall:.2f} "
+          f"golden_alerts={golden} false_stall={stall} kinds="
+          f"{sorted(per_kind)} -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        fails.append(f"{name}: alert oracle unsound (recall={recall}, "
+                     f"golden_alerts={golden}, false_stall={stall}, "
+                     f"per_kind={per_kind})")
 
 
 # pump parity band (gate_engine): the fused pump shares the sim's

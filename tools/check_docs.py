@@ -153,40 +153,48 @@ METRIC_RE = re.compile(
 
 
 def check_metric_catalog(fails: list) -> int:
-    """Every backticked metric-name template cited in DESIGN.md's §12
-    section must exist in ``repro.obs.METRIC_CATALOG`` (the registry's
-    name contract).  ``repro.obs.registry`` is deliberately stdlib-only
-    so this check runs in the docs job without the jax toolchain."""
+    """Every backticked metric-name template cited in DESIGN.md's
+    observability sections (§12, and §16's temporal plane) must exist
+    in ``repro.obs.METRIC_CATALOG`` (the registry's name contract).
+    ``repro.obs.registry`` is deliberately stdlib-only so this check
+    runs in the docs job without the jax toolchain."""
     design = ROOT / "DESIGN.md"
     if not design.exists():
         return 0
     text = design.read_text()
-    m = re.search(r"^##\s*§12\b.*?(?=^##\s|\Z)", text, re.M | re.S)
-    if m is None:
+    sections = [(sec, m.group(0)) for sec in ("§12", "§16")
+                for m in [re.search(rf"^##\s*{sec}\b.*?(?=^##\s|\Z)",
+                                    text, re.M | re.S)]
+                if m is not None]
+    if not sections:
         return 0
     sys.path.insert(0, str(ROOT / "src"))
     try:
         from repro.obs.registry import METRIC_CATALOG
     except Exception as e:                  # pragma: no cover
-        fails.append(f"DESIGN.md §12: cannot import repro.obs.registry "
+        fails.append(f"DESIGN.md: cannot import repro.obs.registry "
                      f"to verify metric names ({e})")
         return 0
     n = 0
-    for code in CODE_RE.findall(m.group(0)):
-        if not METRIC_RE.fullmatch(code):
-            continue                        # not a metric-shaped token
-        if code.startswith("repro.") or code.rsplit(".", 1)[-1] in (
-                "py", "md", "json", "jsonl", "yml", "yaml", "ini",
-                "toml", "txt"):
-            continue                        # module / file path, not a metric
-        n += 1
-        if code not in METRIC_CATALOG:
-            fails.append(f"DESIGN.md §12: metric `{code}` is not in "
-                         f"repro.obs.METRIC_CATALOG — fix the table or "
-                         f"add the template")
-    if n == 0:
-        fails.append("DESIGN.md §12: no backticked metric names found — "
-                     "the metric table is part of the §12 contract")
+    for sec, body in sections:
+        found = 0
+        for code in CODE_RE.findall(body):
+            if not METRIC_RE.fullmatch(code):
+                continue                    # not a metric-shaped token
+            if code.startswith("repro.") or code.rsplit(".", 1)[-1] in (
+                    "py", "md", "json", "jsonl", "yml", "yaml", "ini",
+                    "toml", "txt"):
+                continue                    # module / file path, not a metric
+            found += 1
+            if code not in METRIC_CATALOG:
+                fails.append(f"DESIGN.md {sec}: metric `{code}` is not "
+                             f"in repro.obs.METRIC_CATALOG — fix the "
+                             f"table or add the template")
+        if found == 0:
+            fails.append(f"DESIGN.md {sec}: no backticked metric names "
+                         f"found — the metric table is part of the "
+                         f"{sec} contract")
+        n += found
     return n
 
 
@@ -231,7 +239,7 @@ def main() -> int:
         return 1
     print(f"docs check OK ({len(md_files)} markdown files, "
           f"{n_bench} BENCH artifacts, {n_cites} DESIGN citations, "
-          f"{n_metrics} §12 metric names)")
+          f"{n_metrics} §12/§16 metric names)")
     return 0
 
 
